@@ -1,0 +1,56 @@
+"""Paper Fig. 9: compute + memory overhead of DP-aided MD vs classical MD.
+
+The paper measured ~3 orders of magnitude throughput loss and ~14x GPU
+memory on 1YRF; we report the same two ratios at CPU test scale (direction
+and memory accounting are scale-independent; the magnitude is hardware-
+dependent and recorded as-is).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from .common import save_json, time_fn
+
+
+def _live_bytes() -> int:
+    return sum(b.nbytes for b in jax.live_arrays())
+
+
+def run():
+    import jax.numpy as jnp
+    from repro.core import DeepmdForceProvider
+    from repro.dp import DPModel, paper_dpa1_config
+    from repro.md import (EngineConfig, MDEngine, build_solvated_protein,
+                          mark_nn_group)
+
+    system, pos, nn_idx = build_solvated_protein(10)
+    system = mark_nn_group(system, nn_idx)
+    cfgE = EngineConfig(cutoff=0.9, neighbor_capacity=96, dt=0.0005)
+
+    eng = MDEngine(system, cfgE)
+    st = eng.init_state(pos, 150.0)
+    base_mem = _live_bytes()
+    t_classical = time_fn(lambda: eng.run(st, 5), warmup=1, iters=3) / 5
+
+    model = DPModel(paper_dpa1_config(ntypes=4, rcut=0.6, sel=32))
+    params = model.init_params(jax.random.PRNGKey(0))
+    provider = DeepmdForceProvider(model, params, nn_idx, system.types,
+                                   system.box, system.n_atoms,
+                                   nbr_capacity=48)
+    eng_dp = MDEngine(system, cfgE, special_force=provider)
+    st2 = eng_dp.init_state(pos, 150.0)
+    t_dp = time_fn(lambda: eng_dp.run(st2, 5), warmup=1, iters=3) / 5
+    dp_mem = _live_bytes()
+
+    slowdown = t_dp / t_classical
+    mem_ratio = dp_mem / max(base_mem, 1)
+    save_json("fig9_overhead", {
+        "t_classical_us": t_classical, "t_dp_us": t_dp,
+        "slowdown": slowdown, "mem_classical": base_mem, "mem_dp": dp_mem,
+        "mem_ratio": mem_ratio})
+    return [("fig9_classical_step", t_classical, "baseline"),
+            ("fig9_dp_step", t_dp,
+             f"slowdown {slowdown:.1f}x mem {mem_ratio:.1f}x")]

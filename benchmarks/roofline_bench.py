@@ -1,0 +1,36 @@
+"""Roofline table from the multi-pod dry-run artifacts (EXPERIMENTS.md
+§Roofline source of truth).  Reads experiments/dryrun/*.json."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import save_json
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load_cells():
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def run():
+    cells = [c for c in load_cells() if c.get("ok")]
+    rows = []
+    for c in cells:
+        r = c["roofline"]
+        tag = f"{c['arch']}|{c['shape']}|{c['mesh']}"
+        mem_gb = c["memory"]["peak_bytes_est"] / 1e9
+        rows.append((f"roofline[{tag}]",
+                     r["step_lower_bound_s"] * 1e6,
+                     f"dom={r['dominant']} frac={r['roofline_fraction']:.3f} "
+                     f"mem={mem_gb:.1f}GB useful={c.get('useful_flops_ratio') or 0:.2f}"))
+    n_ok = len(cells)
+    rows.insert(0, ("roofline_cells_compiled", 0.0, f"{n_ok} cells OK"))
+    return rows

@@ -1,0 +1,45 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (plus writes JSON artifacts under
+experiments/bench/ for EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from . import (fig7_training, fig8_validation, fig9_overhead,
+                   fig10_strong_scaling, fig11_weak_scaling, fig12_breakdown,
+                   roofline_bench)
+    modules = [
+        ("fig10_strong_scaling", fig10_strong_scaling),
+        ("fig11_weak_scaling", fig11_weak_scaling),
+        ("fig9_overhead", fig9_overhead),
+        ("fig12_breakdown", fig12_breakdown),
+        ("fig8_validation", fig8_validation),
+        ("fig7_training", fig7_training),
+        ("roofline_bench", roofline_bench),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in modules:
+        t0 = time.time()
+        try:
+            rows = mod.run()
+            for row in rows:
+                n, us, derived = row
+                print(f"{n},{us:.1f},{derived}")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name},NaN,FAILED {type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+        print(f"# {name} took {time.time()-t0:.1f}s", file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

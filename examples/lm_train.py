@@ -1,0 +1,24 @@
+"""Train a reduced LM from the assigned architecture pool end-to-end
+(forward, loss, backward, Adam, checkpoints) — exercises the same train_step
+the multi-pod dry-run lowers at production scale.
+
+  PYTHONPATH=src python examples/lm_train.py --arch gemma2-2b --steps 60
+"""
+import argparse
+import subprocess
+import sys
+
+
+def main():
+    # thin wrapper over the production launcher in reduced mode
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-2b")
+    ap.add_argument("--steps", type=int, default=60)
+    args, rest = ap.parse_known_args()
+    cmd = [sys.executable, "-m", "repro.launch.train", "--arch", args.arch,
+           "--reduced", "--steps", str(args.steps)] + rest
+    raise SystemExit(subprocess.call(cmd))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Render EXPERIMENTS.md tables from experiments/dryrun/*.json."""
+import glob
+import json
+import os
+import sys
+
+DIR = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+
+
+def fmt_bytes(b):
+    return f"{b/1e9:.1f}"
+
+
+def main():
+    cells = []
+    for p in sorted(glob.glob(os.path.join(DIR, "*.json"))):
+        with open(p) as f:
+            cells.append(json.load(f))
+    ok = [c for c in cells if c.get("ok")]
+    bad = [c for c in cells if not c.get("ok")]
+    print(f"<!-- {len(ok)} ok / {len(bad)} failed -->")
+    print("| arch | shape | mesh | compile s | mem GB/chip | t_comp s | "
+          "t_mem s | t_coll s | dominant | MODEL/HLO flops | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for c in ok:
+        r = c["roofline"]
+        u = c.get("useful_flops_ratio") or 0
+        print(f"| {c['arch']} | {c['shape']} | {c['mesh']} "
+              f"| {c.get('compile_s', 0):.0f} "
+              f"| {fmt_bytes(c['memory']['peak_bytes_est'])} "
+              f"| {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+              f"| {r['collective_s']:.3f} | {r['dominant']} "
+              f"| {u:.2f} | {r['roofline_fraction']:.3f} |")
+    for c in bad:
+        print(f"| {c['arch']} | {c['shape']} | {c['mesh']} | FAIL: "
+              f"{c.get('error','')[:80]} |")
+
+
+if __name__ == "__main__":
+    main()

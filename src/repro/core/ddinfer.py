@@ -1,0 +1,231 @@
+"""Distributed Deep-Potential inference: the paper's two-collective schedule.
+
+Per MD step (paper Fig. 6):
+
+  collective 1   all-gather NN-atom coordinates -> every rank holds atomAll
+  (local)        virtual DD: extract local atoms + 2*r_c ghost halo
+  (local)        build full neighbor lists inside the subdomain buffer
+  (local)        DP inference with Eq. 7 ghost masking; autodiff forces on
+                 local *and* ghost entries
+  collective 2   scatter-add forces into the global buffer and all-reduce
+                 (or reduce-scatter: beyond-paper optimization) so every/each
+                 rank gets the final forces
+
+Implemented with ``shard_map`` over a named mesh axis — ``jax.lax``
+collectives are the TPU-native stand-in for the paper's MPI calls.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..dp.model import DPModel
+from .domain import (VirtualGrid, balanced_planes, factor_grid, select_ghosts,
+                     select_local, uniform_grid)
+
+
+@dataclasses.dataclass(frozen=True)
+class DDConfig:
+    """Static configuration of the virtual decomposition."""
+
+    grid_dims: tuple[int, int, int]
+    local_capacity: int
+    ghost_capacity: int
+    nbr_capacity: int            # K for the DP neighbor lists
+    halo: float                  # 2*r_c (owner_full) or r_c (ghost_reduce)
+    balanced: bool = False       # quantile load balancing (beyond paper)
+    reduce_mode: str = "all_reduce"  # "all_reduce" (paper) | "reduce_scatter"
+    force_mode: str = "owner_full"   # paper: owner computes full local forces
+    #   "owner_full"  : 2*r_c halo, no ghost-force reduction (paper Sec. IV-A)
+    #   "ghost_reduce": 1*r_c halo, Eq. 7 masking + ghost-force reduction —
+    #                   beyond-paper: shrinks the irreducible ghost count
+    #                   (the paper's own Eq. 8 bottleneck) at equal collective
+    #                   volume.
+    axis: str = "dd"
+
+    @property
+    def n_ranks(self) -> int:
+        gx, gy, gz = self.grid_dims
+        return gx * gy * gz
+
+    def validate(self, box) -> None:
+        box = np.asarray(box)
+        widths = box / np.asarray(self.grid_dims)
+        if (widths < 1e-6).any():
+            raise ValueError("degenerate subdomain")
+        if (self.halo > box / 2).any():
+            raise ValueError(
+                f"halo {self.halo} exceeds half box {box/2}: periodic ghost "
+                "images would alias; use fewer ranks or a bigger box")
+
+
+def suggest_config(n_atoms: int, box, n_ranks: int, rcut: float,
+                   nbr_capacity: int = 64, slack: float = 1.6,
+                   balanced: bool = False,
+                   force_mode: str = "owner_full") -> DDConfig:
+    """Capacity heuristics from density; overflow flags catch underestimates."""
+    box = np.asarray(box, np.float64)
+    dims = factor_grid(n_ranks, box)
+    halo = 2.0 * rcut if force_mode == "owner_full" else rcut
+    density = n_atoms / box.prod()
+    sub = box / np.asarray(dims)
+    local_cap = int(slack * n_atoms / n_ranks) + 8
+    exp_vol = np.minimum(sub + 2 * halo, box).prod()
+    ghost_cap = int(slack * density * (exp_vol - sub.prod())) + 16
+    ghost_cap = min(ghost_cap, 27 * n_atoms)
+    return DDConfig(grid_dims=dims, local_capacity=local_cap,
+                    ghost_capacity=ghost_cap, nbr_capacity=nbr_capacity,
+                    halo=halo, balanced=balanced, force_mode=force_mode)
+
+
+# ---------------------------------------------------------------------------
+# Per-rank subdomain assembly + inference (runs inside shard_map)
+# ---------------------------------------------------------------------------
+
+def _subdomain_nbr_list(buf_coords: jax.Array, buf_mask: jax.Array,
+                        rcut: float, k: int):
+    """Full neighbor list inside a subdomain buffer (open boundaries —
+    periodic images are explicit entries)."""
+    c = buf_coords.shape[0]
+    dr = buf_coords[None, :, :] - buf_coords[:, None, :]
+    d2 = (dr ** 2).sum(-1)
+    within = (d2 < rcut ** 2) & ~jnp.eye(c, dtype=bool)
+    within &= (buf_mask[:, None] > 0) & (buf_mask[None, :] > 0)
+    score = jnp.where(within, -jnp.arange(c, dtype=jnp.float32)[None, :], -jnp.inf)
+    _, idx = jax.lax.top_k(score, min(k, c))
+    take = jnp.take_along_axis(within, idx, axis=1)
+    if idx.shape[1] < k:
+        pad = k - idx.shape[1]
+        idx = jnp.concatenate([idx, jnp.zeros((c, pad), idx.dtype)], 1)
+        take = jnp.concatenate([take, jnp.zeros((c, pad), bool)], 1)
+    overflow = (within.sum(1) > k).any()
+    return jnp.where(take, idx, 0).astype(jnp.int32), take, overflow
+
+
+def _rank_forces(model: DPModel, params, coords_all, types_all, box,
+                 grid: VirtualGrid, cfg: DDConfig, rank, rcut: float):
+    """Assemble one rank's subdomain and run masked DP inference.
+
+    Returns (energy_local_sum, force_global (N,3) scatter-added, diag dict).
+    """
+    n = coords_all.shape[0]
+    l_idx, l_mask, l_count = select_local(coords_all, grid, rank,
+                                          cfg.local_capacity)
+    g_idx, g_shift, g_mask, g_count = select_ghosts(
+        coords_all, box, grid, rank, cfg.halo, cfg.ghost_capacity)
+
+    buf_coords = jnp.concatenate([coords_all[l_idx],
+                                  coords_all[g_idx] + g_shift])
+    buf_types = jnp.concatenate([types_all[l_idx], types_all[g_idx]])
+    buf_mask = jnp.concatenate([l_mask, g_mask]).astype(coords_all.dtype)
+    # park padded entries far away so they can never enter a cutoff sphere
+    park = jnp.asarray(box).max() * 10.0 * (
+        1.0 + jnp.arange(buf_coords.shape[0], dtype=coords_all.dtype))[:, None]
+    buf_coords = jnp.where(buf_mask[:, None] > 0, buf_coords,
+                           park + jnp.asarray(box) * 3.0)
+
+    nbr_idx, nbr_mask, nbr_overflow = _subdomain_nbr_list(
+        buf_coords, buf_mask, rcut, cfg.nbr_capacity)
+
+    local_mask = jnp.concatenate([
+        l_mask.astype(coords_all.dtype),
+        jnp.zeros(cfg.ghost_capacity, coords_all.dtype)])
+
+    f_global = jnp.zeros((n, 3), coords_all.dtype)
+    if cfg.force_mode == "owner_full":
+        # Paper Sec. IV-A: the 2*r_c halo makes every first-layer ghost's
+        # descriptor exact, so differentiating the *full* buffer energy gives
+        # complete forces on local atoms; ghost rows are discarded and the
+        # final collective only assembles (each row has exactly one writer).
+        e_local, f_buf = model.energy_and_forces_dual(
+            params, buf_coords, buf_types, nbr_idx,
+            nbr_mask.astype(coords_all.dtype),
+            force_mask=buf_mask, report_mask=local_mask, box=None)
+        f_global = f_global.at[l_idx].add(f_buf[: cfg.local_capacity]
+                                          * l_mask[:, None])
+    else:
+        # Eq. 7 ghost-masking: energy over local atoms only; partial forces
+        # land on ghosts and are summed onto the owners by collective 2.
+        e_local, f_buf = model.energy_and_forces(
+            params, buf_coords, buf_types, nbr_idx,
+            nbr_mask.astype(coords_all.dtype), local_mask, box=None)
+        f_global = f_global.at[l_idx].add(f_buf[: cfg.local_capacity]
+                                          * l_mask[:, None])
+        f_global = f_global.at[g_idx].add(f_buf[cfg.local_capacity:]
+                                          * g_mask[:, None])
+    diag = {
+        "local_count": l_count, "ghost_count": g_count,
+        "overflow": (l_count > cfg.local_capacity)
+                    | (g_count > cfg.ghost_capacity) | nbr_overflow,
+    }
+    return e_local, f_global, diag
+
+
+# ---------------------------------------------------------------------------
+# shard_map drivers
+# ---------------------------------------------------------------------------
+
+def make_distributed_force_fn(model: DPModel, cfg: DDConfig, mesh: Mesh,
+                              box, n_atoms: int):
+    """Build the jitted SPMD force function.
+
+    Signature: f(params, coords_sharded (N,3), types (N,)) ->
+    (energy (), forces (N,3) [sharded or replicated], diag).
+    Coordinates come in sharded along the atom axis (as the host engine
+    holds them); collective 1 (all-gather) materializes the replicated
+    buffer — exactly the paper's first MPI call.
+    """
+    cfg.validate(box)
+    axis = cfg.axis
+    rcut = model.cfg.descriptor.rcut
+    box = jnp.asarray(box)
+
+    def per_rank(params, coords_shard, types_all):
+        coords_all = jax.lax.all_gather(coords_shard, axis, axis=0,
+                                        tiled=True)  # collective 1
+        rank = jax.lax.axis_index(axis)
+        if cfg.balanced:
+            grid = balanced_planes(coords_all, box, cfg.grid_dims)
+        else:
+            grid = uniform_grid(box, cfg.grid_dims)
+        e_local, f_global, diag = _rank_forces(
+            model, params, coords_all, types_all, box, grid, cfg, rank, rcut)
+        energy = jax.lax.psum(e_local, axis)
+        if cfg.reduce_mode == "reduce_scatter":
+            forces = jax.lax.psum_scatter(f_global, axis, scatter_dimension=0,
+                                          tiled=True)        # collective 2'
+        else:
+            forces = jax.lax.psum(f_global, axis)            # collective 2
+        diag = {k: jax.lax.psum(v, axis) if k != "overflow"
+                else jax.lax.psum(v.astype(jnp.int32), axis)
+                for k, v in diag.items()}
+        return energy, forces, diag
+
+    out_force_spec = (P(axis, None) if cfg.reduce_mode == "reduce_scatter"
+                      else P(None, None))
+    mapped = jax.shard_map(
+        per_rank, mesh=mesh,
+        in_specs=(P(), P(axis, None), P()),
+        out_specs=(P(), out_force_spec,
+                   {"local_count": P(), "ghost_count": P(), "overflow": P()}),
+        check_vma=False)
+    return jax.jit(mapped)
+
+
+def single_domain_forces(model: DPModel, params, coords, types, box,
+                         nbr_capacity: int):
+    """Reference path: one domain, PBC minimum image (stock-NNPot analogue:
+    rank 0 does everything)."""
+    from ..md.neighbors import brute_force_neighbor_list
+    nl = brute_force_neighbor_list(coords, jnp.asarray(box),
+                                   model.cfg.descriptor.rcut, nbr_capacity,
+                                   half=False)
+    local = jnp.ones((coords.shape[0],), coords.dtype)
+    return model.energy_and_forces(params, coords, types, nl.idx, nl.mask,
+                                   local, box=jnp.asarray(box))

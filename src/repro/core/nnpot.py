@@ -1,0 +1,101 @@
+"""NNPot-style special-force provider with a DeePMD backend (paper Sec. IV-A).
+
+``DeepmdForceProvider`` is the analogue of the paper's ``DeepmdModel`` class
+inside GROMACS's NNPot module: it owns the DP model handle, performs the
+data-layout + unit conversions before inference, extracts the marked ("NN")
+atoms from the full position array, runs (optionally distributed) inference,
+and scatters the resulting forces back into engine layout.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from ..dp.model import DPModel
+from .ddinfer import DDConfig, make_distributed_force_fn, single_domain_forces
+
+
+@dataclasses.dataclass(frozen=True)
+class UnitConversion:
+    """GROMACS (nm, kJ/mol) <-> model native units (DeePMD: Angstrom, eV).
+
+    The in-house model here is trained directly in GROMACS units, so the
+    default is identity; the eV/Angstrom preset mirrors the conversions the
+    paper's DeepmdModel wrapper performs around deepmd::compute().
+    """
+
+    length_to_model: float = 1.0   # nm -> model length
+    energy_to_engine: float = 1.0  # model energy -> kJ/mol
+
+    @staticmethod
+    def deepmd_ev_angstrom() -> "UnitConversion":
+        return UnitConversion(length_to_model=10.0,      # nm -> A
+                              energy_to_engine=96.48533212)  # eV -> kJ/mol
+
+    @property
+    def force_to_engine(self) -> float:
+        # dE/dr: (eV -> kJ/mol) * (1/A -> 1/nm)
+        return self.energy_to_engine * self.length_to_model
+
+
+class DeepmdForceProvider:
+    """Plugs into ``MDEngine(special_force=...)``.
+
+    nn_indices are static (topology-time preprocessing marks the DP group);
+    the provider is jit-transparent: calling it inside the engine's jitted
+    step traces straight through shard_map when distributed.
+    """
+
+    def __init__(self, model: DPModel, params, nn_indices: np.ndarray,
+                 types, box, n_atoms: int,
+                 dd_config: Optional[DDConfig] = None,
+                 mesh: Optional[Mesh] = None,
+                 units: UnitConversion = UnitConversion(),
+                 nbr_capacity: int = 64):
+        self.model = model
+        self.params = params
+        self.nn_indices = jnp.asarray(np.asarray(nn_indices, np.int32))
+        self.n_nn = len(nn_indices)
+        self.n_atoms = n_atoms
+        self.units = units
+        self.nbr_capacity = nbr_capacity
+        nn_types = jnp.asarray(types)[self.nn_indices]
+        box_model = jnp.asarray(box) * units.length_to_model
+        self.box_model = box_model
+        self.nn_types = nn_types
+        self.dd_config = dd_config
+        if dd_config is not None:
+            assert mesh is not None, "distributed mode needs a mesh"
+            self._dist_fn = make_distributed_force_fn(
+                model, dd_config, mesh, box_model, self.n_nn)
+        else:
+            self._dist_fn = None
+        self.last_diag: Optional[dict] = None
+
+    def __call__(self, positions: jax.Array, box: jax.Array):
+        """(energy kJ/mol, forces (N,3) kJ/mol/nm) with zeros off the group."""
+        nn_pos = positions[self.nn_indices] * self.units.length_to_model
+        # wrap into the model box (virtual DD expects wrapped coordinates)
+        nn_pos = jnp.mod(nn_pos, self.box_model)
+        if self._dist_fn is not None:
+            e, f_nn, diag = self._dist_fn(self.params, nn_pos, self.nn_types)
+            if f_nn.shape[0] != self.n_nn:  # reduce_scatter path: re-gather
+                f_nn = f_nn.reshape(-1, 3)[: self.n_nn]
+            if not isinstance(e, jax.core.Tracer):
+                # only observable when called eagerly; inside a jitted MD
+                # step the diag values are tracers and must not leak
+                self.last_diag = diag
+        else:
+            e, f_nn = single_domain_forces(
+                self.model, self.params, nn_pos, self.nn_types,
+                self.box_model, self.nbr_capacity)
+        e = e * self.units.energy_to_engine
+        f_nn = f_nn * self.units.force_to_engine
+        forces = jnp.zeros((self.n_atoms, 3), positions.dtype)
+        forces = forces.at[self.nn_indices].set(f_nn.astype(positions.dtype))
+        return e.astype(positions.dtype), forces

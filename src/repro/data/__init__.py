@@ -1,0 +1,2 @@
+from .synthetic import Dataset, make_dataset, oracle_energy, oracle_energy_and_forces  # noqa: F401
+from .loader import DeterministicLoader, LoaderConfig  # noqa: F401

@@ -1,0 +1,182 @@
+"""Synthetic "solvated protein fragment" dataset with an analytic QM stand-in.
+
+The paper trains its DPA-1 on solvated-protein-fragment DFT data (AIS-Square,
+2.6 M frames).  That dataset cannot be fetched here, so the *training system*
+is exercised against an analytic many-body oracle: per-species Morse pairs +
+a Stillinger-Weber-style 3-body angular term.  The oracle is deliberately
+many-body (not pair-decomposable) so the descriptor actually has to learn
+angular structure — the same role DFT labels play for the real model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..md.neighbors import brute_force_neighbor_list
+
+
+# ---------------------------------------------------------------------------
+# Oracle ("DFT") potential
+# ---------------------------------------------------------------------------
+
+# species: 0 = O(water), 1 = C, 2 = N, 3 = O(protein)
+_DE = np.array([[0.65, 0.45, 0.50, 0.55],
+                [0.45, 0.90, 0.75, 0.70],
+                [0.50, 0.75, 0.80, 0.65],
+                [0.55, 0.70, 0.65, 0.85]], np.float32)        # well depth
+_R0 = np.array([[0.31, 0.30, 0.29, 0.28],
+                [0.30, 0.15, 0.14, 0.14],
+                [0.29, 0.14, 0.14, 0.13],
+                [0.28, 0.14, 0.13, 0.13]], np.float32) + 0.12  # eq. distance
+_A = 9.0           # Morse steepness [1/nm] — soft enough for stable labels
+_K3 = 2.0          # 3-body strength
+_COS0 = -1.0 / 3.0  # tetrahedral-ish preferred angle
+_RC3 = 0.35        # 3-body cutoff [nm]
+
+
+def _smooth_cut(r, rc):
+    x = jnp.clip(r / rc, 0.0, 1.0)
+    return (1 - x ** 2) ** 2
+
+
+def oracle_energy(coords: jax.Array, types: jax.Array, rc: float = 0.6) -> jax.Array:
+    """Open-boundary analytic energy of one frame (N small: O(N^2) fine)."""
+    n = coords.shape[0]
+    dr = coords[None, :, :] - coords[:, None, :]
+    d2 = (dr ** 2).sum(-1)
+    eye = jnp.eye(n, dtype=bool)
+    d2s = jnp.where(eye, 1.0, d2)
+    r = jnp.sqrt(d2s)
+    de = jnp.asarray(_DE)[types[:, None], types[None, :]]
+    r0 = jnp.asarray(_R0)[types[:, None], types[None, :]]
+    morse = de * (jnp.exp(-2 * _A * (r - r0)) - 2 * jnp.exp(-_A * (r - r0)))
+    pair_mask = (~eye) & (d2s < rc ** 2)
+    e2 = 0.5 * jnp.where(pair_mask, morse * _smooth_cut(r, rc), 0.0).sum()
+
+    # 3-body: sum over centers i, neighbor pairs (j,k)
+    inv_r = jnp.where(eye, 0.0, 1.0 / r)
+    rhat = dr * inv_r[..., None]
+    w3 = jnp.where((~eye) & (d2s < _RC3 ** 2), _smooth_cut(r, _RC3), 0.0)
+    cos_jk = jnp.einsum("ijd,ikd->ijk", rhat, rhat)
+    wjk = w3[:, :, None] * w3[:, None, :]
+    diag = jnp.eye(n, dtype=bool)[None, :, :]
+    e3 = 0.5 * _K3 * jnp.where(diag, 0.0, wjk * (cos_jk - _COS0) ** 2).sum()
+    return e2 + e3
+
+
+oracle_energy_and_forces = jax.jit(
+    lambda c, t: (lambda e, g: (e, -g))(*jax.value_and_grad(oracle_energy)(c, t)))
+
+
+# ---------------------------------------------------------------------------
+# Frame generation
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Dataset:
+    coords: np.ndarray    # (F, N, 3)
+    types: np.ndarray     # (F, N)
+    energies: np.ndarray  # (F,)
+    forces: np.ndarray    # (F, N, 3)
+
+    @property
+    def n_frames(self) -> int:
+        return len(self.energies)
+
+    @property
+    def n_atoms(self) -> int:
+        return self.coords.shape[1]
+
+    def split(self, valid_fraction: float = 0.1):
+        n_valid = max(1, int(self.n_frames * valid_fraction))
+        tr = Dataset(self.coords[:-n_valid], self.types[:-n_valid],
+                     self.energies[:-n_valid], self.forces[:-n_valid])
+        va = Dataset(self.coords[-n_valid:], self.types[-n_valid:],
+                     self.energies[-n_valid:], self.forces[-n_valid:])
+        return tr, va
+
+
+def _fragment_positions(rng: np.random.Generator, n_atoms: int) -> np.ndarray:
+    """Chain fragment + scattered solvent with min-distance rejection."""
+    n_chain = n_atoms // 2
+    t = np.arange(n_chain) * 0.5
+    chain = np.stack([0.2 * np.cos(t), 0.2 * np.sin(t), 0.14 * np.arange(n_chain)], -1)
+    chain += rng.normal(0, 0.02, chain.shape)
+    span = max(chain[:, 2].max() + 0.6, 1.2)
+    sol = []
+    tries = 0
+    while len(sol) < n_atoms - n_chain and tries < 20000:
+        p = rng.uniform(-span / 2, span / 2, 3) + np.array([0, 0, span / 2 - 0.3])
+        pts = np.concatenate([chain] + ([np.array(sol)] if sol else []))
+        if (np.linalg.norm(pts - p, axis=-1) > 0.26).all():
+            sol.append(p)
+        tries += 1
+    while len(sol) < n_atoms - n_chain:  # fallback fill
+        sol.append(rng.uniform(-span, span, 3))
+    return np.concatenate([chain, np.array(sol)]).astype(np.float32)
+
+
+def relax_geometry(coords: np.ndarray, types: np.ndarray, n_steps: int = 80,
+                   lr: float = 2e-4) -> np.ndarray:
+    """Steepest descent on the oracle so frames sit near a PES minimum —
+    the analogue of sampling DFT data from equilibrated AIMD trajectories
+    (near-equilibrium frames, moderate forces, learnable labels)."""
+    c = jnp.asarray(coords)
+    t = jnp.asarray(types)
+
+    @jax.jit
+    def step(c, _):
+        _, f = oracle_energy_and_forces(c, t)
+        fmag = jnp.linalg.norm(f, axis=-1, keepdims=True)
+        f = f / jnp.maximum(fmag / 50.0, 1.0)  # cap step on steep walls
+        return c + lr * f, None
+
+    c, _ = jax.lax.scan(step, c, None, length=n_steps)
+    return np.asarray(c)
+
+
+def make_dataset(n_frames: int, n_atoms: int = 48, seed: int = 0,
+                 jitter: float = 0.01) -> Dataset:
+    """Frames = jittered conformations of relaxed fragment geometries;
+    labels from the oracle.  Batched label evaluation keeps it fast."""
+    rng = np.random.default_rng(seed)
+    n_geo = max(1, n_frames // 16)
+    types_tmp = np.concatenate([(np.arange(n_atoms // 2) % 3 + 1),
+                                np.zeros(n_atoms - n_atoms // 2)]).astype(np.int32)
+    geos = [relax_geometry(_fragment_positions(rng, n_atoms), types_tmp)
+            for _ in range(n_geo)]
+    n_chain = n_atoms // 2
+    types_chain = (np.arange(n_chain) % 3 + 1).astype(np.int32)
+    coords, types = [], []
+    for f in range(n_frames):
+        g = geos[f % n_geo]
+        coords.append(g + rng.normal(0, jitter, g.shape).astype(np.float32))
+        types.append(np.concatenate([types_chain,
+                                     np.zeros(n_atoms - n_chain, np.int32)]))
+    coords = np.stack(coords)
+    types = np.stack(types)
+
+    batched = jax.jit(jax.vmap(lambda c, t: oracle_energy_and_forces(c, t)))
+    es, fs = [], []
+    bs = 64
+    for i in range(0, n_frames, bs):
+        e, f = batched(jnp.asarray(coords[i:i + bs]), jnp.asarray(types[i:i + bs]))
+        es.append(np.asarray(e))
+        fs.append(np.asarray(f))
+    return Dataset(coords=coords, types=types,
+                   energies=np.concatenate(es).astype(np.float32),
+                   forces=np.concatenate(fs).astype(np.float32))
+
+
+def frame_neighbor_lists(coords: jax.Array, rcut: float, sel: int):
+    """Full neighbor lists for a batch of open-boundary frames."""
+    big_box = jnp.full((3,), 1e3, coords.dtype)  # open boundaries
+
+    def one(c):
+        nl = brute_force_neighbor_list(c, big_box, rcut, sel, half=False)
+        return nl.idx, nl.mask
+    return jax.vmap(one)(coords)

@@ -1,0 +1,5 @@
+"""Deep Potential models (DP-SE, DPA-1) and training."""
+from .common import EnvStats, env_matrix, switch_fn  # noqa: F401
+from .descriptors import DescriptorConfig, apply_descriptor, init_descriptor  # noqa: F401
+from .model import DPConfig, DPModel, paper_dpa1_config  # noqa: F401
+from .train import TrainConfig, train, force_rmse, fit_env_stats  # noqa: F401

@@ -1,0 +1,103 @@
+"""Deep Potential common machinery: switching function, environment matrix.
+
+The descriptor input is the *environment matrix* R^i in R^{K x 4} built from
+the K neighbors of atom i (paper Sec. II-B / DP-SE):
+
+    R^i_j = ( s(r_ij),  s(r_ij) x_ij / r_ij,  s(r_ij) y_ij / r_ij,
+              s(r_ij) z_ij / r_ij )
+
+with the smooth switching function s(r) that decays 1/r -> 0 between
+``rcut_smth`` and ``rcut`` so energies are C^2 at the cutoff — this is what
+makes capacity padding safe on TPU: padded neighbors sit at s(r) = 0.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+def switch_fn(r: jax.Array, rcut_smth: float, rcut: float) -> jax.Array:
+    """DeePMD smooth switching: 1/r below rcut_smth, poly-decayed to 0 at rcut."""
+    u = (r - rcut_smth) / (rcut - rcut_smth)
+    uu = jnp.clip(u, 0.0, 1.0)
+    poly = uu ** 3 * (-6 * uu ** 2 + 15 * uu - 10) + 1.0
+    inv_r = 1.0 / jnp.maximum(r, 1e-6)
+    return jnp.where(r < rcut, inv_r * jnp.where(r < rcut_smth, 1.0, poly), 0.0)
+
+
+def env_matrix(coords: jax.Array, box, nbr_idx: jax.Array, nbr_mask: jax.Array,
+               rcut_smth: float, rcut: float):
+    """Environment matrix for every atom.
+
+    Args:
+      coords: (N, 3); box: (3,) or None for open boundaries.
+      nbr_idx: (N, K) int32, -1 padded; nbr_mask: (N, K).
+    Returns:
+      R (N, K, 4), r_hat (N, K, 3) unit vectors, dist (N, K), sw (N, K).
+    """
+    safe = jnp.where(nbr_idx >= 0, nbr_idx, 0)
+    dr = coords[safe] - coords[:, None, :]
+    if box is not None:
+        dr = dr - box * jnp.round(dr / box)
+    d2 = jnp.where(nbr_mask > 0, (dr ** 2).sum(-1), 1.0)  # double-where guard
+    dist = jnp.sqrt(d2)
+    sw = switch_fn(dist, rcut_smth, rcut) * nbr_mask
+    r_hat = dr / dist[..., None]
+    R = jnp.concatenate([sw[..., None], sw[..., None] * r_hat], axis=-1)
+    return R, r_hat * nbr_mask[..., None], dist, sw
+
+
+def env_matrix_shifted(coords_local: jax.Array, coords_nbr: jax.Array,
+                       nbr_mask: jax.Array, rcut_smth: float, rcut: float):
+    """Variant where neighbor coordinates are pre-gathered (+ PBC image
+    shifts already applied) — the layout the virtual-DD path produces."""
+    dr = coords_nbr - coords_local[:, None, :]
+    d2 = jnp.where(nbr_mask > 0, (dr ** 2).sum(-1), 1.0)
+    dist = jnp.sqrt(d2)
+    sw = switch_fn(dist, rcut_smth, rcut) * nbr_mask
+    r_hat = dr / dist[..., None]
+    R = jnp.concatenate([sw[..., None], sw[..., None] * r_hat], axis=-1)
+    return R, r_hat * nbr_mask[..., None], dist, sw
+
+
+@dataclasses.dataclass(frozen=True)
+class EnvStats:
+    """davg / dstd normalization of the environment matrix (DeePMD `stats`)."""
+
+    davg: jax.Array  # (ntypes, 4)
+    dstd: jax.Array  # (ntypes, 4)
+
+    def normalize(self, R: jax.Array, types: jax.Array) -> jax.Array:
+        t = jnp.clip(types, 0)
+        return (R - self.davg[t][:, None, :]) / self.dstd[t][:, None, :]
+
+    @staticmethod
+    def identity(ntypes: int) -> "EnvStats":
+        return EnvStats(davg=jnp.zeros((ntypes, 4)),
+                        dstd=jnp.ones((ntypes, 4)))
+
+
+def compute_env_stats(frames_R: jax.Array, frames_types: jax.Array,
+                      frames_mask: jax.Array, ntypes: int) -> EnvStats:
+    """Accumulate per-type mean/std of env-matrix rows over sample frames.
+
+    frames_R: (F, N, K, 4); frames_types: (F, N); frames_mask: (F, N, K).
+    Radial column gets its own stats; the 3 angular columns share one std and
+    zero mean (DeePMD convention — they average to 0 by symmetry).
+    """
+    davg = []
+    dstd = []
+    for t in range(ntypes):
+        sel = (frames_types == t)[..., None] * frames_mask  # (F, N, K)
+        w = jnp.maximum(sel.sum(), 1.0)
+        mean_r = (frames_R[..., 0] * sel).sum() / w
+        var_r = (((frames_R[..., 0] - mean_r) * sel) ** 2).sum() / w
+        var_a = ((frames_R[..., 1:] * sel[..., None]) ** 2).sum() / (3 * w)
+        davg.append(jnp.array([mean_r, 0.0, 0.0, 0.0]))
+        std_r = jnp.sqrt(var_r + 1e-8)
+        std_a = jnp.sqrt(var_a + 1e-8)
+        dstd.append(jnp.stack([jnp.maximum(std_r, 1e-2)] +
+                              [jnp.maximum(std_a, 1e-2)] * 3))
+    return EnvStats(davg=jnp.stack(davg), dstd=jnp.stack(dstd))

@@ -1,0 +1,127 @@
+"""DP-SE and DPA-1 descriptors (paper Fig. 3a/3b).
+
+Both are *strictly local*: descriptor D^i depends only on atoms inside one
+cutoff of atom i — the property that makes the paper's 2*r_c-halo virtual
+domain decomposition exact.  Message-passing families (DPA-2/3) are out of
+scope by the paper's own argument (Sec. IV-A) and are documented in DESIGN.md.
+
+DP-SE   : D^i = (G^i)^T R~ (R~)^T G^i_r            (bilinear reduction)
+DPA-1   : same reduction, but G^i is refined by l_a gated self-attention
+          layers over the neighbor axis; the gate injects the angular
+          correlation r_hat . r_hat^T (se_attention_v2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import EnvStats, env_matrix_shifted
+from .networks import layer_norm, layer_norm_init, mlp_apply, mlp_init
+
+
+@dataclasses.dataclass(frozen=True)
+class DescriptorConfig:
+    kind: str = "dpa1"            # "dpse" | "dpa1"
+    rcut: float = 0.6             # nm (paper MD runs use r_c = 0.8/2 per-model; configurable)
+    rcut_smth: float = 0.2
+    sel: int = 64                 # neighbor capacity K
+    ntypes: int = 4
+    neuron: tuple = (32, 64, 128)  # embedding net widths (paper Sec. IV-B)
+    axis_neuron: int = 16         # M2: columns of G kept for the right factor
+    type_embed_dim: int = 8
+    attn_layers: int = 3          # l_a (paper: three attention layers)
+    attn_hidden: int = 256        # paper: hidden size 256
+    attn_heads: int = 1
+
+    @property
+    def m1(self) -> int:
+        return self.neuron[-1]
+
+    @property
+    def out_dim(self) -> int:
+        return self.m1 * self.axis_neuron
+
+
+def init_descriptor(rng: jax.Array, cfg: DescriptorConfig) -> dict:
+    k_emb, k_type, k_attn = jax.random.split(rng, 3)
+    params: dict = {}
+    # type embedding table (+1 slot for padding type -1 -> clipped to 0 w/ mask)
+    params["type_embed"] = 0.1 * jax.random.normal(
+        k_type, (cfg.ntypes, cfg.type_embed_dim))
+    # embedding net: input [s(r), type_emb_j] -> neuron widths
+    in_dim = 1 + cfg.type_embed_dim
+    params["embed"] = mlp_init(k_emb, (in_dim,) + tuple(cfg.neuron))
+    if cfg.kind == "dpa1":
+        layers = []
+        for k in jax.random.split(k_attn, cfg.attn_layers):
+            kq, kk, kv, ko = jax.random.split(k, 4)
+            d, h = cfg.m1, cfg.attn_hidden
+            layers.append({
+                "wq": jax.random.normal(kq, (d, h)) / jnp.sqrt(d),
+                "wk": jax.random.normal(kk, (d, h)) / jnp.sqrt(d),
+                "wv": jax.random.normal(kv, (d, h)) / jnp.sqrt(d),
+                "wo": jax.random.normal(ko, (h, d)) / jnp.sqrt(h),
+                "ln": layer_norm_init(d),
+            })
+        params["attn"] = layers
+    return params
+
+
+def _gated_attention_layer(layer: dict, g: jax.Array, gate: jax.Array,
+                           mask: jax.Array, sw: jax.Array) -> jax.Array:
+    """One se_attention_v2 block over the neighbor axis.
+
+    g: (N, K, M1); gate: (N, K, K) angular dot products r_hat.r_hat^T;
+    mask: (N, K); sw: (N, K) normalized switch envelope in [0, 1].
+    """
+    q = g @ layer["wq"]
+    k = g @ layer["wk"]
+    v = g @ layer["wv"]
+    scale = 1.0 / jnp.sqrt(q.shape[-1])
+    logits = jnp.einsum("nkh,nlh->nkl", q, k) * scale
+    neg = jnp.finfo(logits.dtype).min
+    logits = jnp.where(mask[:, None, :] > 0, logits, neg)
+    w = jax.nn.softmax(logits, axis=-1)
+    # angular gate + smooth switch envelope (v2 "smooth attention"):
+    # weights decay smoothly to zero as either partner crosses the cutoff,
+    # keeping the descriptor C^1 when neighbors enter/leave the list.
+    w = w * gate * (sw[:, None, :] * sw[:, :, None])
+    w = w * mask[:, None, :] * mask[:, :, None]
+    out = jnp.einsum("nkl,nlh->nkh", w, v) @ layer["wo"]
+    g = g + out
+    g = layer_norm(g, layer["ln"]["gamma"], layer["ln"]["beta"])
+    return g * mask[..., None]
+
+
+def apply_descriptor(params: dict, cfg: DescriptorConfig, stats: EnvStats,
+                     coords_center: jax.Array, coords_nbr: jax.Array,
+                     types_center: jax.Array, types_nbr: jax.Array,
+                     nbr_mask: jax.Array) -> jax.Array:
+    """Compute D^i for every center atom.
+
+    coords_center (N,3); coords_nbr (N,K,3) pre-gathered (PBC shifts applied);
+    types_* int32 (-1 padding); nbr_mask (N,K).
+    Returns descriptors (N, M1*M2).
+    """
+    R, r_hat, dist, sw = env_matrix_shifted(coords_center, coords_nbr,
+                                            nbr_mask, cfg.rcut_smth, cfg.rcut)
+    R = stats.normalize(R, types_center) * nbr_mask[..., None]
+
+    t_emb = params["type_embed"][jnp.clip(types_nbr, 0)]
+    feat = jnp.concatenate([sw[..., None], t_emb * nbr_mask[..., None]], -1)
+    g = mlp_apply(params["embed"], feat)              # (N, K, M1)
+    g = g * nbr_mask[..., None]
+
+    if cfg.kind == "dpa1":
+        gate = jnp.einsum("nkd,nld->nkl", r_hat, r_hat)
+        sw_env = sw * dist  # recover the [0,1] polynomial envelope from s(r)
+        for layer in params["attn"]:
+            g = _gated_attention_layer(layer, g, gate, nbr_mask, sw_env)
+
+    k_norm = 1.0 / cfg.sel
+    gr = jnp.einsum("nkm,nka->nma", g, R) * k_norm     # (N, M1, 4)
+    d = jnp.einsum("nma,npa->nmp", gr, gr[:, : cfg.axis_neuron, :])
+    return d.reshape(d.shape[0], -1)                   # (N, M1*M2)

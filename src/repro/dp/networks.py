@@ -1,0 +1,58 @@
+"""Plain-JAX MLPs with DeePMD-style ResNet skips (no flax dependency).
+
+Embedding nets grow 32 -> 64 -> 128 using the concat-skip trick when the
+width doubles; fitting nets use identity skips on equal widths.  Activation
+is tanh (DeePMD default).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def mlp_init(rng: jax.Array, sizes: Sequence[int], final_bias: float = 0.0,
+             dtype=jnp.float32) -> list[dict]:
+    params = []
+    keys = jax.random.split(rng, len(sizes) - 1)
+    for k, (din, dout) in zip(keys, zip(sizes[:-1], sizes[1:])):
+        w = jax.random.normal(k, (din, dout), dtype) / jnp.sqrt(din)
+        b = jnp.full((dout,), final_bias if dout == sizes[-1] else 0.0, dtype)
+        params.append({"w": w, "b": b})
+    return params
+
+
+def mlp_apply(params: list[dict], x: jax.Array, activation=jnp.tanh,
+              resnet: bool = True, final_linear: bool = True) -> jax.Array:
+    n = len(params)
+    for i, layer in enumerate(params):
+        y = x @ layer["w"] + layer["b"]
+        last = i == n - 1
+        if last and final_linear:
+            x = y
+            break
+        y = activation(y)
+        if resnet:
+            din, dout = layer["w"].shape
+            if dout == din:
+                y = y + x
+            elif dout == 2 * din:
+                y = y + jnp.concatenate([x, x], axis=-1)
+        x = y
+    return x
+
+
+def layer_norm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * gamma + beta
+
+
+def layer_norm_init(dim: int, dtype=jnp.float32) -> dict:
+    return {"gamma": jnp.ones((dim,), dtype), "beta": jnp.zeros((dim,), dtype)}
+
+
+def count_params(tree) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(tree))

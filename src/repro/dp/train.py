@@ -1,0 +1,186 @@
+"""Deep Potential training: DeePMD-style energy+force loss, Adam, RMSE logs.
+
+Reproduces the paper's training pipeline (Sec. IV-B / Fig. 7): force-RMSE
+tracked against train and validation sets, exponential LR decay, prefactor
+schedule shifting weight from forces to energies as training proceeds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..ckpt import AsyncCheckpointer
+from ..data.synthetic import Dataset, frame_neighbor_lists
+from ..optim import adam, apply_updates, exponential_decay, deepmd_prefactors
+from .common import EnvStats, compute_env_stats, env_matrix
+from .model import DPConfig, DPModel
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    lr0: float = 1e-3
+    decay_steps: int = 500
+    decay_rate: float = 0.95
+    batch_size: int = 8
+    n_steps: int = 2000
+    eval_every: int = 100
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 500
+    seed: int = 0
+
+
+def fit_env_stats(model_cfg: DPConfig, data: Dataset, n_sample: int = 32) -> EnvStats:
+    d = model_cfg.descriptor
+    coords = jnp.asarray(data.coords[:n_sample])
+    types = jnp.asarray(data.types[:n_sample])
+    idx, mask = frame_neighbor_lists(coords, d.rcut, d.sel)
+
+    def frame_R(c, i, m):
+        R, *_ = env_matrix(c, None, i, m, d.rcut_smth, d.rcut)
+        return R
+    Rs = jax.vmap(frame_R)(coords, idx, mask)
+    return compute_env_stats(Rs, types, mask, d.ntypes)
+
+
+def fit_energy_bias(data: Dataset, ntypes: int) -> np.ndarray:
+    """Least-squares per-species energy bias (DeePMD `bias_atom_e`)."""
+    counts = np.stack([(data.types == t).sum(1) for t in range(ntypes)], -1)
+    bias, *_ = np.linalg.lstsq(counts.astype(np.float64),
+                               data.energies.astype(np.float64), rcond=None)
+    return bias.astype(np.float32)
+
+
+def make_loss_fn(model: DPModel):
+    d = model.cfg.descriptor
+
+    def single_frame(params, coords, types, nbr_idx, nbr_mask, e_ref, f_ref):
+        n = coords.shape[0]
+        local = jnp.ones((n,), coords.dtype)
+        e, f = model.energy_and_forces(params, coords, types, nbr_idx,
+                                       nbr_mask, local, box=None)
+        de = (e - e_ref) / n
+        df2 = ((f - f_ref) ** 2).mean()
+        return de ** 2, df2
+
+    def loss_fn(params, batch, pref_e, pref_f):
+        de2, df2 = jax.vmap(lambda c, t, i, m, e, f: single_frame(
+            params, c, t, i, m, e, f))(
+            batch["coords"], batch["types"], batch["nbr_idx"],
+            batch["nbr_mask"], batch["energies"], batch["forces"])
+        l_e = de2.mean()
+        l_f = df2.mean()
+        return pref_e * l_e + pref_f * l_f, (l_e, l_f)
+
+    return loss_fn
+
+
+def prepare_batches(data: Dataset, rcut: float, sel: int, batch_size: int,
+                    seed: int):
+    """Precompute neighbor lists once per frame (geometry jitter is small
+    enough that rebuild-per-epoch is unnecessary for the oracle data)."""
+    coords = jnp.asarray(data.coords)
+    idx, mask = frame_neighbor_lists(coords, rcut, sel)
+    return {
+        "coords": np.asarray(data.coords), "types": np.asarray(data.types),
+        "nbr_idx": np.asarray(idx), "nbr_mask": np.asarray(mask),
+        "energies": np.asarray(data.energies), "forces": np.asarray(data.forces),
+    }
+
+
+def force_rmse(model: DPModel, params, arrays, max_frames: int = 64) -> float:
+    n = min(max_frames, len(arrays["energies"]))
+    f_err = 0.0
+    count = 0
+
+    @jax.jit
+    def one(params, c, t, i, m):
+        local = jnp.ones((c.shape[0],), c.dtype)
+        _, f = model.energy_and_forces(params, c, t, i, m, local, None)
+        return f
+
+    for k in range(0, n, 16):
+        sl = slice(k, min(k + 16, n))
+        f = jax.vmap(lambda c, t, i, m: one(params, c, t, i, m))(
+            jnp.asarray(arrays["coords"][sl]), jnp.asarray(arrays["types"][sl]),
+            jnp.asarray(arrays["nbr_idx"][sl]), jnp.asarray(arrays["nbr_mask"][sl]))
+        f_err += float(((f - jnp.asarray(arrays["forces"][sl])) ** 2).sum())
+        count += f.size
+    return float(np.sqrt(f_err / count))
+
+
+def train(model: DPModel, train_data: Dataset, valid_data: Dataset,
+          cfg: TrainConfig, log: Optional[Callable[[dict], None]] = None):
+    """Returns (params, history).  Restores from checkpoint_dir if present."""
+    d = model.cfg.descriptor
+    arrays_tr = prepare_batches(train_data, d.rcut, d.sel, cfg.batch_size, cfg.seed)
+    arrays_va = prepare_batches(valid_data, d.rcut, d.sel, cfg.batch_size, cfg.seed)
+
+    rng = jax.random.PRNGKey(cfg.seed)
+    params = model.init_params(rng)
+    params["bias"] = jnp.asarray(fit_energy_bias(train_data, model.cfg.ntypes))
+
+    lr_fn = exponential_decay(cfg.lr0, cfg.decay_steps, cfg.decay_rate)
+    pref_fn = deepmd_prefactors()
+    opt = adam(lr_fn)
+    opt_state = opt.init(params)
+    loss_fn = make_loss_fn(model)
+
+    ckpt = AsyncCheckpointer(cfg.checkpoint_dir) if cfg.checkpoint_dir else None
+    start_step = 0
+    if ckpt is not None:
+        restored, step = ckpt.restore_latest({"params": params, "opt": opt_state})
+        if restored is not None:
+            params, opt_state = restored["params"], restored["opt"]
+            start_step = step + 1
+
+    @jax.jit
+    def train_step(params, opt_state, batch, step):
+        lr_ratio = lr_fn(step) / cfg.lr0
+        pref_e, pref_f = pref_fn(lr_ratio)
+        (loss, (l_e, l_f)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch, pref_e, pref_f)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, loss, l_e, l_f
+
+    n_frames = len(arrays_tr["energies"])
+    rng_np = np.random.default_rng(cfg.seed)
+    history = []
+    t0 = time.time()
+    for step in range(start_step, cfg.n_steps):
+        # deterministic batch: permutation seeded by (seed, epoch)
+        epoch = (step * cfg.batch_size) // n_frames
+        perm = np.random.default_rng((cfg.seed, epoch)).permutation(n_frames)
+        lo = (step * cfg.batch_size) % max(n_frames - cfg.batch_size + 1, 1)
+        sel_idx = perm[lo: lo + cfg.batch_size]
+        if len(sel_idx) < cfg.batch_size:
+            sel_idx = perm[: cfg.batch_size]
+        batch = {k: jnp.asarray(v[sel_idx]) for k, v in arrays_tr.items()}
+        params, opt_state, loss, l_e, l_f = train_step(
+            params, opt_state, batch, jnp.asarray(step))
+
+        if step % cfg.eval_every == 0 or step == cfg.n_steps - 1:
+            rec = {
+                "step": step,
+                "loss": float(loss),
+                "rmse_e_per_atom": float(jnp.sqrt(l_e)),
+                "rmse_f_train": force_rmse(model, params, arrays_tr, 32),
+                "rmse_f_valid": force_rmse(model, params, arrays_va, 32),
+                "lr": float(lr_fn(step)),
+                "wall_s": time.time() - t0,
+            }
+            history.append(rec)
+            if log:
+                log(rec)
+        if ckpt is not None and step and step % cfg.checkpoint_every == 0:
+            ckpt.save({"params": params, "opt": opt_state}, step)
+    if ckpt is not None:
+        ckpt.save({"params": params, "opt": opt_state}, cfg.n_steps - 1)
+        ckpt.wait()
+    return params, history

@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: fused environment-matrix construction.
+
+This is the TPU adaptation of DeePMD-kit's custom ``prod_env_mat`` CUDA op —
+the first compute hot-spot of every DP inference step.  The GPU version
+gathers neighbors and computes (s, s*x/r, s*y/r, s*z/r) in one kernel to
+avoid materializing intermediates in HBM; on TPU we do the same with a
+VMEM-tiled elementwise fusion.
+
+TPU-native layout decisions (DESIGN.md Hardware adaptation):
+  * SoA planes: neighbor displacement components arrive as three (N, K)
+    planes instead of an (N, K, 3) array, so the lane dimension is the
+    neighbor axis (pad K to a multiple of 128) and the sublane dimension is
+    the atom axis (block of 8) — native (8, 128) VREG tiling, no relayouts.
+  * One grid step processes a (BLOCK_N, K) tile; all four outputs are
+    written from registers, so HBM traffic is exactly inputs + outputs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _env_mat_kernel(dx_ref, dy_ref, dz_ref, mask_ref,
+                    s_ref, sx_ref, sy_ref, sz_ref,
+                    *, rcut_smth: float, rcut: float):
+    dx = dx_ref[...]
+    dy = dy_ref[...]
+    dz = dz_ref[...]
+    mask = mask_ref[...]
+
+    d2 = dx * dx + dy * dy + dz * dz
+    d2 = jnp.where(mask > 0, d2, 1.0)          # padded entries -> safe r
+    inv_r = jax.lax.rsqrt(d2)
+    r = d2 * inv_r                              # r = d2 / sqrt(d2)
+
+    # smooth switch: 1/r below rcut_smth, 1/r * poly to 0 at rcut
+    u = (r - rcut_smth) / (rcut - rcut_smth)
+    uu = jnp.clip(u, 0.0, 1.0)
+    poly = uu * uu * uu * (-6.0 * uu * uu + 15.0 * uu - 10.0) + 1.0
+    sw = jnp.where(r < rcut, inv_r * jnp.where(r < rcut_smth, 1.0, poly), 0.0)
+    sw = sw * mask
+
+    s_ref[...] = sw
+    sx_ref[...] = sw * dx * inv_r
+    sy_ref[...] = sw * dy * inv_r
+    sz_ref[...] = sw * dz * inv_r
+
+
+@functools.partial(jax.jit, static_argnames=("rcut_smth", "rcut", "block_n",
+                                             "interpret"))
+def env_mat(dx: jax.Array, dy: jax.Array, dz: jax.Array, mask: jax.Array,
+            rcut_smth: float, rcut: float, block_n: int = 8,
+            interpret: bool = False):
+    """Fused env-matrix planes from displacement planes.
+
+    Args: dx/dy/dz/mask (N, K) — displacement components center->neighbor and
+    validity mask.  K should be a multiple of 128 on real TPUs (the ops.py
+    wrapper pads); N is padded to ``block_n`` here.
+    Returns: (s, sx, sy, sz), each (N, K).
+    """
+    n, k = dx.shape
+    pad_n = (-n) % block_n
+    if pad_n:
+        padder = lambda a: jnp.pad(a, ((0, pad_n), (0, 0)))
+        dx, dy, dz, mask = map(padder, (dx, dy, dz, mask))
+    np_, kp = dx.shape
+
+    grid = (np_ // block_n,)
+    spec = pl.BlockSpec((block_n, kp), lambda i: (i, 0))
+    out_shape = [jax.ShapeDtypeStruct((np_, kp), dx.dtype)] * 4
+    kernel = functools.partial(_env_mat_kernel, rcut_smth=rcut_smth,
+                               rcut=rcut)
+    s, sx, sy, sz = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec] * 4,
+        out_specs=[spec] * 4,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(dx, dy, dz, mask)
+    if pad_n:
+        cut = lambda a: a[:n]
+        return cut(s), cut(sx), cut(sy), cut(sz)
+    return s, sx, sy, sz

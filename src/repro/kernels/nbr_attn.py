@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: DPA-1 gated neighbor self-attention (se_attention_v2).
+
+The second DP hot-spot: for every center atom, l_a attention layers over its
+K neighbors.  The GPU implementation launches one fused attention kernel per
+layer; the TPU adaptation processes a block of atoms per grid step and keeps
+the whole (K x K) score matrix plus the (K, M) activations resident in VMEM,
+so only G enters and leaves HBM per layer.
+
+Layout: G tiles are (BLOCK_N, K, M) with M = 128 in lanes (MXU-aligned);
+per-atom matmuls run as batched ``dot_general`` over the block.  The angular
+gate is computed in-kernel from the r_hat planes — it never touches HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _nbr_attn_kernel(g_ref, rx_ref, ry_ref, rz_ref, sw_ref, mask_ref,
+                     wq_ref, wk_ref, wv_ref, wo_ref, gamma_ref, beta_ref,
+                     out_ref):
+    g = g_ref[...]          # (B, K, M)
+    mask = mask_ref[...]    # (B, K)
+    sw = sw_ref[...]        # (B, K) smooth envelope in [0, 1]
+    wq = wq_ref[...]        # (M, H)
+    wk = wk_ref[...]
+    wv = wv_ref[...]
+    wo = wo_ref[...]        # (H, M)
+
+    b, k, m = g.shape
+    h = wq.shape[1]
+    dims = (((2,), (0,)), ((), ()))  # batched (B,K,M) @ (M,H)
+    q = jax.lax.dot_general(g, wq, dims)            # (B, K, H)
+    kk = jax.lax.dot_general(g, wk, dims)
+    v = jax.lax.dot_general(g, wv, dims)
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(h, g.dtype))
+    scores = jax.lax.dot_general(q, kk, (((2,), (2,)), ((0,), (0,)))) * scale
+    neg = jnp.finfo(scores.dtype).min
+    scores = jnp.where(mask[:, None, :] > 0, scores, neg)
+    w = jax.nn.softmax(scores, axis=-1)             # (B, K, K)
+
+    # angular gate r_hat . r_hat^T from the three direction planes
+    rx = rx_ref[...]
+    ry = ry_ref[...]
+    rz = rz_ref[...]
+    gate = (rx[:, :, None] * rx[:, None, :] + ry[:, :, None] * ry[:, None, :]
+            + rz[:, :, None] * rz[:, None, :])
+    w = w * gate * (sw[:, :, None] * sw[:, None, :])
+    w = w * (mask[:, :, None] * mask[:, None, :])
+
+    o = jax.lax.dot_general(w, v, (((2,), (1,)), ((0,), (0,))))  # (B, K, H)
+    o = jax.lax.dot_general(o, wo, dims)                          # (B, K, M)
+    g = g + o
+
+    # layer norm over M
+    mu = g.mean(-1, keepdims=True)
+    var = ((g - mu) ** 2).mean(-1, keepdims=True)
+    g = (g - mu) * jax.lax.rsqrt(var + 1e-5) * gamma_ref[...] + beta_ref[...]
+    out_ref[...] = g * mask[..., None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def nbr_attention_layer(g, rx, ry, rz, sw, mask, wq, wk, wv, wo, gamma, beta,
+                        block_n: int = 8, interpret: bool = False):
+    """One gated self-attention layer over the neighbor axis.
+
+    g (N, K, M); rx/ry/rz/sw/mask (N, K); wq/wk/wv (M, H); wo (H, M);
+    gamma/beta (M,).  Returns the updated (N, K, M).
+    """
+    n, k, m = g.shape
+    h = wq.shape[1]
+    pad_n = (-n) % block_n
+    if pad_n:
+        g = jnp.pad(g, ((0, pad_n), (0, 0), (0, 0)))
+        rx, ry, rz, sw, mask = (jnp.pad(a, ((0, pad_n), (0, 0)))
+                                for a in (rx, ry, rz, sw, mask))
+    np_ = n + pad_n
+
+    grid = (np_ // block_n,)
+    tile3 = pl.BlockSpec((block_n, k, m), lambda i: (i, 0, 0))
+    tile2 = pl.BlockSpec((block_n, k), lambda i: (i, 0))
+    full = lambda *shape: pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+
+    out = pl.pallas_call(
+        _nbr_attn_kernel,
+        grid=grid,
+        in_specs=[tile3, tile2, tile2, tile2, tile2, tile2,
+                  full(m, h), full(m, h), full(m, h), full(h, m),
+                  full(m), full(m)],
+        out_specs=tile3,
+        out_shape=jax.ShapeDtypeStruct((np_, k, m), g.dtype),
+        interpret=interpret,
+    )(g, rx, ry, rz, sw, mask, wq, wk, wv, wo, gamma, beta)
+    return out[:n] if pad_n else out

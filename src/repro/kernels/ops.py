@@ -1,0 +1,61 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``use_pallas`` selects the kernel path (interpret-mode on CPU, compiled
+Mosaic on TPU); the default jnp path is used by the dry-run (Mosaic does not
+lower on the CPU backend) and as the autodiff-friendly fallback.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .env_mat import env_mat
+from .flash_attn import flash_attention
+from .nbr_attn import nbr_attention_layer
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+def _pad_lanes(x, mult: int = 128):
+    k = x.shape[-1]
+    pad = (-k) % mult
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    return x, k
+
+
+def env_mat_op(dx, dy, dz, mask, rcut_smth: float, rcut: float,
+               use_pallas: bool = False, interpret: bool = not _ON_TPU):
+    """Env-matrix planes; pads the neighbor axis to 128 lanes for TPU."""
+    if not use_pallas:
+        return ref.env_mat_ref(dx, dy, dz, mask, rcut_smth, rcut)
+    (dxp, k0), (dyp, _), (dzp, _), (mp, _) = (
+        _pad_lanes(dx), _pad_lanes(dy), _pad_lanes(dz), _pad_lanes(mask))
+    s, sx, sy, sz = env_mat(dxp, dyp, dzp, mp, rcut_smth, rcut,
+                            interpret=interpret)
+    cut = lambda a: a[..., :k0]
+    return cut(s), cut(sx), cut(sy), cut(sz)
+
+
+def nbr_attention_op(g, rx, ry, rz, sw, mask, wq, wk, wv, wo, gamma, beta,
+                     use_pallas: bool = False,
+                     interpret: bool = not _ON_TPU):
+    if not use_pallas:
+        return ref.nbr_attention_layer_ref(g, rx, ry, rz, sw, mask,
+                                           wq, wk, wv, wo, gamma, beta)
+    return nbr_attention_layer(g, rx, ry, rz, sw, mask, wq, wk, wv, wo,
+                               gamma, beta, interpret=interpret)
+
+
+def attention_op(q, k, v, causal: bool = True, window: int = 0,
+                 softcap: float = 0.0, q_offset: int = 0,
+                 use_pallas: bool = False,
+                 interpret: bool = not _ON_TPU):
+    if not use_pallas:
+        return ref.attention_ref(q, k, v, causal, window, softcap, q_offset)
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           softcap=softcap, q_offset=q_offset,
+                           interpret=interpret)

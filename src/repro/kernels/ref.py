@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Tests sweep shapes/dtypes and assert_allclose kernels (interpret=True on CPU)
+against these references.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def env_mat_ref(dx, dy, dz, mask, rcut_smth: float, rcut: float):
+    d2 = dx * dx + dy * dy + dz * dz
+    d2 = jnp.where(mask > 0, d2, 1.0)
+    r = jnp.sqrt(d2)
+    u = (r - rcut_smth) / (rcut - rcut_smth)
+    uu = jnp.clip(u, 0.0, 1.0)
+    poly = uu ** 3 * (-6 * uu ** 2 + 15 * uu - 10) + 1.0
+    sw = jnp.where(r < rcut, (1.0 / r) * jnp.where(r < rcut_smth, 1.0, poly), 0.0)
+    sw = sw * mask
+    return sw, sw * dx / r, sw * dy / r, sw * dz / r
+
+
+def nbr_attention_layer_ref(g, rx, ry, rz, sw, mask, wq, wk, wv, wo,
+                            gamma, beta):
+    q = g @ wq
+    k = g @ wk
+    v = g @ wv
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], g.dtype))
+    scores = jnp.einsum("nkh,nlh->nkl", q, k) * scale
+    neg = jnp.finfo(scores.dtype).min
+    scores = jnp.where(mask[:, None, :] > 0, scores, neg)
+    w = jax.nn.softmax(scores, axis=-1)
+    gate = (rx[:, :, None] * rx[:, None, :] + ry[:, :, None] * ry[:, None, :]
+            + rz[:, :, None] * rz[:, None, :])
+    w = w * gate * (sw[:, :, None] * sw[:, None, :])
+    w = w * (mask[:, :, None] * mask[:, None, :])
+    o = jnp.einsum("nkl,nlh->nkh", w, v) @ wo
+    g = g + o
+    mu = g.mean(-1, keepdims=True)
+    var = ((g - mu) ** 2).mean(-1, keepdims=True)
+    g = (g - mu) * jax.lax.rsqrt(var + 1e-5) * gamma + beta
+    return g * mask[..., None]
+
+
+def attention_ref(q, k, v, causal: bool = True, window: int = 0,
+                  softcap: float = 0.0, q_offset: int = 0):
+    """Dense reference attention with GQA broadcast; fp32 accumulation."""
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    group = hq // hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(d)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = q_offset + jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    w = jnp.where(mask.any(-1)[None, None, :, None], w, 0.0)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,2 @@
+"""LM framework for the assigned architecture pool."""
+from . import layers, model, serve_lib, sharding, train_lib  # noqa: F401

@@ -1,0 +1,791 @@
+"""LM building blocks: attention variants, MoE, Mamba, RWKV6, cross-attn.
+
+Pure apply-style functions over params dicts (no flax).  Conventions:
+  * activations (B, S, D); attention heads split as (B, H, S, hd);
+  * params in ``cfg.dtype`` (bf16 default), softmax/norm/scan accumulation
+    in fp32;
+  * every sequence mixer has a *train/prefill* form (full sequence) and a
+    *decode* form (one token against a cache/state) — serve_lib wires the
+    latter.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig, LayerSpec
+
+
+def dt(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# Unroll every internal scan (layer stacks, kv-chunk loops, ssm chunk loops)
+# into straight-line HLO.  Only the dry-run depth-fit flips this: XLA's
+# cost_analysis counts while bodies once, so trip-weighted FLOP accounting
+# needs unrolled modules (small depths only — see launch/dryrun._depth_fit).
+SCAN_UNROLL = False
+
+
+def set_scan_unroll(v: bool) -> None:
+    global SCAN_UNROLL
+    SCAN_UNROLL = v
+
+
+def _scan(body, carry, xs, length=None):
+    return jax.lax.scan(body, carry, xs, length=length,
+                        unroll=True if SCAN_UNROLL else 1)
+
+
+# Perf knob (§Perf iteration 3): broadcast KV up to the full query head
+# count before chunked attention.  Without it, the grouped (hkv, g) reshape
+# cannot be sharded on a 16-way model axis when hkv < 16 and XLA replicates
+# the whole attention computation per chip.
+GQA_REPEAT = False
+
+
+def set_gqa_repeat(v: bool) -> None:
+    global GQA_REPEAT
+    GQA_REPEAT = v
+
+
+def maybe_constrain(x, *axes):
+    """with_sharding_constraint against the *ambient* mesh, resolving only
+    axis names that exist (no-op outside a mesh context).  ``axes`` entries:
+    None | axis name | "dp" (expands to ("pod","data") subset)."""
+    from jax.interpreters import pxla
+    from jax.sharding import PartitionSpec as P
+    mesh = pxla.thread_resources.env.physical_mesh
+    if mesh.empty:
+        return x
+    names = set(mesh.axis_names)
+    spec = []
+    for a in axes:
+        if a == "dp":
+            dp = tuple(n for n in ("pod", "data") if n in names)
+            spec.append(dp if dp else None)
+        elif a is None or a in names:
+            spec.append(a)
+        else:
+            spec.append(None)
+    # drop axes that don't divide the dim evenly (jax would error)
+    fixed = []
+    for dim, a in zip(x.shape, spec):
+        size = 1
+        for n in ((a,) if isinstance(a, str) else (a or ())):
+            size *= mesh.shape[n]
+        fixed.append(a if (size > 1 and dim % size == 0) else None)
+    return jax.lax.with_sharding_constraint(x, P(*fixed))
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations / rope
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, gamma, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = (x32 * x32).mean(-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * (1.0 + gamma)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+def rope(x, positions, theta: float):
+    """x (..., S, hd) rotated pairwise; positions (S,) or (B, S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freq  # (..., S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    # broadcast over head axis: x is (B, H, S, hd), ang (B?, S, half)
+    while cos.ndim < x.ndim:
+        cos, sin = cos[..., None, :, :], sin[..., None, :, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Memory-efficient attention (pure-jnp flash; differentiable; GSPMD-friendly)
+# ---------------------------------------------------------------------------
+
+def chunked_attention(q, k, v, causal=True, window=0, softcap=0.0,
+                      q_offset=0, kv_len=None, chunk=512):
+    """q (B,Hq,Sq,hd), k/v (B,Hkv,Sk,hd).  Running-softmax over kv chunks —
+    never materializes (Sq, Sk).  ``kv_len`` masks positions >= kv_len
+    (decode against a partially filled cache)."""
+    b, hq, sq, hd = q.shape
+    if GQA_REPEAT and k.shape[1] != hq:
+        rep = hq // k.shape[1]
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    _, hkv, sk, _ = k.shape
+    dv = v.shape[-1]  # may differ from hd (MLA: qk 192, v 128)
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, sq, hd)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+
+    pad = (-sk) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    n_chunks = (sk + pad) // chunk
+    kc = k.reshape(b, hkv, n_chunks, chunk, hd).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, hkv, n_chunks, chunk, dv).transpose(2, 0, 1, 3, 4)
+
+    q_pos = q_offset + jnp.arange(sq)
+
+    def body(carry, inp):
+        acc, m_i, l_i = carry
+        j, kj, vj = inp
+        # bf16 inputs + fp32 accumulation: MXU-native, halves qk read traffic
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kj,
+                       preferred_element_type=jnp.float32) * scale
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        k_pos = j * chunk + jnp.arange(chunk)
+        mask = (k_pos[None, :] < (sk if kv_len is None else kv_len))
+        mask = jnp.broadcast_to(mask, (sq, chunk))
+        if causal:
+            mask = mask & (q_pos[:, None] >= k_pos[None, :])
+        if window > 0:
+            mask = mask & ((q_pos[:, None] - k_pos[None, :]) < window)
+        s = jnp.where(mask, s, -1e30)
+        m_new = jnp.maximum(m_i, s.max(-1))
+        p = jnp.where(mask, jnp.exp(s - m_new[..., None]), 0.0)
+        alpha = jnp.exp(m_i - m_new)
+        l_new = l_i * alpha + p.sum(-1)
+        # probs in input dtype for the AV matmul (flash-kernel convention):
+        # halves the dominant HBM-traffic tensor; accumulation stays fp32
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p.astype(vj.dtype), vj).astype(jnp.float32)
+        return (acc, m_new, l_new), None
+
+    acc0 = jnp.zeros((b, hkv, group, sq, dv), jnp.float32)
+    m0 = jnp.full((b, hkv, group, sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, hkv, group, sq), jnp.float32)
+    # checkpoint the chunk body: without it, scan-AD stacks the (.., chunk)
+    # fp32 score/prob tensors for every chunk (measured 4.9 TB/chip HBM
+    # traffic on qwen3 train_4k — §Perf iteration 5); with it, backward
+    # recomputes them per chunk from the carry (flash-attention backward).
+    (acc, m_i, l_i), _ = _scan(
+        jax.checkpoint(body), (acc0, m0, l0),
+        (jnp.arange(n_chunks), kc, vc))
+    out = acc / jnp.maximum(l_i, 1e-30)[..., None]
+    return out.reshape(b, hq, sq, dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention (covers llama/minitron/qwen/gemma2/whisper-self variants)
+# ---------------------------------------------------------------------------
+
+def init_attention(rng, cfg: ArchConfig, dtype) -> dict:
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(rng, 4)
+    std = cfg.d_model ** -0.5
+    p = {
+        "wq": jax.random.normal(ks[0], (cfg.d_model, cfg.n_heads, hd), dtype) * std,
+        "wk": jax.random.normal(ks[1], (cfg.d_model, cfg.n_kv_heads, hd), dtype) * std,
+        "wv": jax.random.normal(ks[2], (cfg.d_model, cfg.n_kv_heads, hd), dtype) * std,
+        "wo": jax.random.normal(ks[3], (cfg.n_heads, hd, cfg.d_model), dtype) * std,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads, hd), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads, hd), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads, hd), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def attention_qkv(p, x, cfg: ArchConfig, positions):
+    """Returns q (B,H,S,hd), k/v (B,Hkv,S,hd) with rope/norm/bias applied."""
+    q = jnp.einsum("bsd,dhe->bhse", x, p["wq"])
+    k = jnp.einsum("bsd,dhe->bhse", x, p["wk"])
+    v = jnp.einsum("bsd,dhe->bhse", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"].T[None, :, None, :].reshape(1, cfg.n_heads, 1, -1)
+        k = k + p["bk"].reshape(1, cfg.n_kv_heads, 1, -1)
+        v = v + p["bv"].reshape(1, cfg.n_kv_heads, 1, -1)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_layer(p, x, cfg: ArchConfig, spec: LayerSpec, positions,
+                    causal=True):
+    window = cfg.window if spec.mixer == "attn_local" else 0
+    q, k, v = attention_qkv(p, x, cfg, positions)
+    # NOTE(perf log): explicitly repeating KV to full head count and pinning
+    # q/k/v/o to (dp, model) was tried and REFUTED — it pushed XLA into
+    # fp32 residual all-reduces (409 GB wire vs 225 GB baseline on
+    # qwen3-8b/train_4k).  See EXPERIMENTS.md §Perf iteration 2.
+    o = chunked_attention(q, k, v, causal=causal, window=window,
+                          softcap=cfg.attn_softcap)
+    return jnp.einsum("bhse,hed->bsd", o, p["wo"])
+
+
+FLASH_DECODE = False  # §Perf knob: shard-mapped distributed flash decoding
+
+
+def set_flash_decode(v: bool) -> None:
+    global FLASH_DECODE
+    FLASH_DECODE = v
+
+
+def _flash_decode_sharded(q, k, v, pos, window: int, softcap: float):
+    """Distributed flash decoding: the KV cache stays sequence-sharded over
+    the "model" axis; each shard computes partial softmax stats and the
+    combine is two tiny psums (m via pmax, l/o via psum) — replacing the
+    per-layer fp32 cache all-gather GSPMD otherwise emits (§Perf iter 9:
+    161 GB -> ~0 wire on llama-vision decode_32k)."""
+    from jax.interpreters import pxla
+    from jax.sharding import PartitionSpec as P
+    mesh = pxla.thread_resources.env.physical_mesh
+    if mesh.empty or "model" not in mesh.axis_names \
+            or k.shape[2] % mesh.shape["model"] != 0:
+        return None
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    b = q.shape[0]
+    bspec = dp if (b % max(1, np.prod([mesh.shape[a] for a in dp]))) == 0 \
+        and b >= np.prod([mesh.shape[a] for a in dp]) else None
+    n_shards = mesh.shape["model"]
+    s_loc = k.shape[2] // n_shards
+
+    def shard_fn(q, k, v, pos):
+        # local shapes: q (b, hq, 1, hd); k/v (b, hkv, s_loc, hd)
+        idx = jax.lax.axis_index("model")
+        base = idx * s_loc
+        hq, hkv = q.shape[1], k.shape[1]
+        g = hq // hkv
+        qg = q.reshape(q.shape[0], hkv, g, hd := q.shape[-1])
+        s = jnp.einsum("bhgd,bhkd->bhgk", qg, k,
+                       preferred_element_type=jnp.float32)
+        s = s / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        k_pos = base + jnp.arange(s_loc)
+        mask = k_pos <= pos
+        if window > 0:
+            mask &= (pos - k_pos) < window
+        s = jnp.where(mask[None, None, None, :], s, -1e30)
+        m_loc = s.max(-1)
+        m_g = jax.lax.pmax(m_loc, "model")
+        p_ = jnp.where(mask[None, None, None, :],
+                       jnp.exp(s - m_g[..., None]), 0.0)
+        l_g = jax.lax.psum(p_.sum(-1), "model")
+        o_loc = jnp.einsum("bhgk,bhkd->bhgd", p_.astype(v.dtype), v)
+        o_g = jax.lax.psum(o_loc.astype(jnp.float32), "model")
+        o = o_g / jnp.maximum(l_g, 1e-30)[..., None]
+        return o.reshape(q.shape[0], hq, 1, hd).astype(q.dtype)
+
+    return jax.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(bspec, None, None, None), P(bspec, None, "model", None),
+                  P(bspec, None, "model", None), P()),
+        out_specs=P(bspec, None, None, None), check_vma=False,
+    )(q, k, v, pos)
+
+
+def attention_decode(p, x, cfg: ArchConfig, spec: LayerSpec, cache, pos):
+    """One-token decode.  cache = {"k","v"} (B, Hkv, S_max, hd); pos ()."""
+    q, k_new, v_new = attention_qkv(p, x, cfg,
+                                    jnp.full((x.shape[0], 1), pos))
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, pos, axis=2)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, pos, axis=2)
+    window = cfg.window if spec.mixer == "attn_local" else 0
+    o = None
+    if FLASH_DECODE:
+        o = _flash_decode_sharded(q, k, v, pos, window, cfg.attn_softcap)
+    if o is None:
+        ck = min(k.shape[2], max(2048, k.shape[2] // 64))  # <=64 chunks
+        o = chunked_attention(q, k, v, causal=True, window=window,
+                              softcap=cfg.attn_softcap, q_offset=pos,
+                              kv_len=pos + 1, chunk=ck)
+    out = jnp.einsum("bhse,hed->bsd", o, p["wo"])
+    return out, {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek-v3): low-rank q/kv compression; absorbed decode
+# ---------------------------------------------------------------------------
+
+def init_mla(rng, cfg: ArchConfig, dtype) -> dict:
+    ks = jax.random.split(rng, 8)
+    d, h = cfg.d_model, cfg.n_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    std = d ** -0.5
+    return {
+        "w_dq": jax.random.normal(ks[0], (d, qr), dtype) * std,
+        "q_norm": jnp.zeros((qr,), dtype),
+        "w_uq": jax.random.normal(ks[1], (qr, h, dn + dr), dtype) * qr ** -0.5,
+        "w_dkv": jax.random.normal(ks[2], (d, kvr), dtype) * std,
+        "kv_norm": jnp.zeros((kvr,), dtype),
+        "w_kr": jax.random.normal(ks[3], (d, dr), dtype) * std,
+        "w_uk": jax.random.normal(ks[4], (kvr, h, dn), dtype) * kvr ** -0.5,
+        "w_uv": jax.random.normal(ks[5], (kvr, h, dv), dtype) * kvr ** -0.5,
+        "wo": jax.random.normal(ks[6], (h, dv, d), dtype) * (h * dv) ** -0.5,
+    }
+
+
+def mla_compress(p, x, cfg: ArchConfig, positions):
+    """Shared compression: returns (q_nope, q_rope, ckv, k_rope)."""
+    cq = rms_norm(x @ p["w_dq"], p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhe->bhse", cq, p["w_uq"])
+    q_nope = q[..., : cfg.qk_nope_dim]
+    q_rope = rope(q[..., cfg.qk_nope_dim:], positions, cfg.rope_theta)
+    ckv = rms_norm(x @ p["w_dkv"], p["kv_norm"], cfg.norm_eps)  # (B,S,kvr)
+    k_rope = rope((x @ p["w_kr"])[:, None, :, :], positions,
+                  cfg.rope_theta)  # (B,1,S,dr)
+    return q_nope, q_rope, ckv, k_rope
+
+
+def mla_layer(p, x, cfg: ArchConfig, spec: LayerSpec, positions):
+    """Training/prefill: decompress k/v per layer (standard path)."""
+    q_nope, q_rope, ckv, k_rope = mla_compress(p, x, cfg, positions)
+    k_nope = jnp.einsum("bsr,rhe->bhse", ckv, p["w_uk"])
+    v = jnp.einsum("bsr,rhe->bhse", ckv, p["w_uv"])
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(k_rope, k_nope.shape[:-1]
+                                          + (cfg.qk_rope_dim,))], -1)
+    o = chunked_attention(q, k, v, causal=True)
+    return jnp.einsum("bhse,hed->bsd", o, p["wo"])
+
+
+def mla_decode(p, x, cfg: ArchConfig, spec: LayerSpec, cache, pos):
+    """Absorbed decode: cache only (ckv, k_rope) — the MLA serving win.
+
+    score = (q_nope W_uk) ckv^T + q_rope k_rope^T ; out = (attn ckv) W_uv.
+    """
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos)
+    q_nope, q_rope, ckv_new, kr_new = mla_compress(p, x, cfg, positions)
+    ckv = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv_new, pos, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"],
+                                                 kr_new[:, 0], pos, axis=1)
+    q_c = jnp.einsum("bhse,rhe->bhsr", q_nope, p["w_uk"])        # absorb W_uk
+    s = (jnp.einsum("bhsr,btr->bhst", q_c.astype(jnp.float32),
+                    ckv.astype(jnp.float32))
+         + jnp.einsum("bhse,bte->bhst", q_rope.astype(jnp.float32),
+                      k_rope.astype(jnp.float32)))
+    s = s / jnp.sqrt(jnp.asarray(cfg.qk_nope_dim + cfg.qk_rope_dim, jnp.float32))
+    mask = jnp.arange(ckv.shape[1])[None, None, None, :] <= pos
+    s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o_c = jnp.einsum("bhst,btr->bhsr", w, ckv.astype(jnp.float32))
+    o = jnp.einsum("bhsr,rhe->bhse", o_c.astype(x.dtype), p["w_uv"])
+    out = jnp.einsum("bhse,hed->bsd", o, p["wo"])
+    return out, {"ckv": ckv, "k_rope": k_rope}
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (whisper decoder, llama-3.2-vision)
+# ---------------------------------------------------------------------------
+
+def init_cross_attention(rng, cfg: ArchConfig, dtype) -> dict:
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(rng, 5)
+    std = cfg.d_model ** -0.5
+    return {
+        "wq": jax.random.normal(ks[0], (cfg.d_model, cfg.n_heads, hd), dtype) * std,
+        "wk": jax.random.normal(ks[1], (cfg.d_model, cfg.n_kv_heads, hd), dtype) * std,
+        "wv": jax.random.normal(ks[2], (cfg.d_model, cfg.n_kv_heads, hd), dtype) * std,
+        "wo": jax.random.normal(ks[3], (cfg.n_heads, hd, cfg.d_model), dtype) * std,
+        "ctx_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+
+
+def cross_attention_layer(p, x, context, cfg: ArchConfig):
+    """context (B, T, D) — image patches / audio frames (modality stub)."""
+    ctx = rms_norm(context, p["ctx_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhe->bhse", x, p["wq"])
+    k = jnp.einsum("btd,dhe->bhte", ctx, p["wk"])
+    v = jnp.einsum("btd,dhe->bhte", ctx, p["wv"])
+    o = chunked_attention(q, k, v, causal=False,
+                          chunk=min(512, max(64, k.shape[2])))
+    return jnp.einsum("bhse,hed->bsd", o, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP / MoE
+# ---------------------------------------------------------------------------
+
+def init_mlp(rng, d_model: int, d_ff: int, dtype, geglu=False) -> dict:
+    ks = jax.random.split(rng, 3)
+    std = d_model ** -0.5
+    return {
+        "w_gate": jax.random.normal(ks[0], (d_model, d_ff), dtype) * std,
+        "w_up": jax.random.normal(ks[1], (d_model, d_ff), dtype) * std,
+        "w_down": jax.random.normal(ks[2], (d_ff, d_model), dtype) * d_ff ** -0.5,
+    }
+
+
+def mlp_layer(p, x, act="silu"):
+    g = act_fn(act)(x @ p["w_gate"])
+    return (g * (x @ p["w_up"])) @ p["w_down"]
+
+
+def init_moe(rng, cfg: ArchConfig, dtype) -> dict:
+    e = cfg.n_experts
+    dff = cfg.moe_d_ff or cfg.d_ff
+    ks = jax.random.split(rng, 5)
+    std = cfg.d_model ** -0.5
+    p = {
+        "router": jax.random.normal(ks[0], (cfg.d_model, e), jnp.float32) * std,
+        "w_gate": jax.random.normal(ks[1], (e, cfg.d_model, dff), dtype) * std,
+        "w_up": jax.random.normal(ks[2], (e, cfg.d_model, dff), dtype) * std,
+        "w_down": jax.random.normal(ks[3], (e, dff, cfg.d_model), dtype) * dff ** -0.5,
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(ks[4], cfg.d_model,
+                               dff * cfg.n_shared_experts, dtype)
+    return p
+
+
+def moe_layer(p, x, cfg: ArchConfig, act="silu"):
+    """Dropping MoE with cumsum position assignment (GSPMD-friendly).
+
+    Returns (out, aux_loss).  Experts dim is sharded over "model" (EP) by
+    the sharding rules; XLA inserts the token all-to-alls.
+    """
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    xf = x.reshape(t, d)
+    logits = (xf.astype(jnp.float32) @ p["router"])
+    if cfg.router_scores == "sigmoid":     # deepseek-v3 aux-free style
+        scores = jax.nn.sigmoid(logits)
+    else:
+        scores = jax.nn.softmax(logits, -1)
+    topw, topi = jax.lax.top_k(scores, k)          # (T, k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch-style): f_e * p_e
+    pe = scores.mean(0) if cfg.router_scores == "softmax" else (
+        jax.nn.softmax(logits, -1).mean(0))
+    fe = jnp.zeros((e,), jnp.float32).at[topi.reshape(-1)].add(1.0) / (t * k)
+    aux = e * (pe * fe).sum()
+
+    capacity = max(int(t * k / e * cfg.capacity_factor), 4)
+    # position of each (token, slot) within its expert via k cumsum passes
+    pos_list, keep_list = [], []
+    counts = jnp.zeros((e,), jnp.int32)
+    for j in range(k):
+        onehot = jax.nn.one_hot(topi[:, j], e, dtype=jnp.int32)   # (T, E)
+        pos_j = counts[topi[:, j]] + (jnp.cumsum(onehot, 0) - onehot)[
+            jnp.arange(t), topi[:, j]]
+        counts = counts + onehot.sum(0)
+        keep_list.append(pos_j < capacity)
+        pos_list.append(jnp.minimum(pos_j, capacity - 1))
+
+    buf = jnp.zeros((e * capacity, d), x.dtype)
+    for j in range(k):
+        dest = topi[:, j] * capacity + pos_list[j]
+        buf = buf.at[dest].add(xf * keep_list[j][:, None].astype(x.dtype))
+    buf = buf.reshape(e, capacity, d)
+
+    g = act_fn(act)(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"]))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    h = jnp.einsum("ecf,efd->ecd", g * u, p["w_down"]).reshape(e * capacity, d)
+
+    out = jnp.zeros((t, d), x.dtype)
+    for j in range(k):
+        dest = topi[:, j] * capacity + pos_list[j]
+        w_j = (topw[:, j] * keep_list[j]).astype(x.dtype)
+        out = out + h[dest] * w_j[:, None]
+
+    if cfg.n_shared_experts:
+        out = out + mlp_layer(p["shared"], xf, act)
+    return out.reshape(b, s, d), aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba (jamba) — selective SSM with chunked scan
+# ---------------------------------------------------------------------------
+
+def init_mamba(rng, cfg: ArchConfig, dtype) -> dict:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_d_state
+    ks = jax.random.split(rng, 7)
+    dt_rank = max(d // 16, 1)
+    return {
+        "w_in": jax.random.normal(ks[0], (d, 2 * di), dtype) * d ** -0.5,
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv, di), dtype) * 0.3,
+        "conv_b": jnp.zeros((di,), dtype),
+        "w_bcdt": jax.random.normal(ks[2], (di, 2 * n + dt_rank), dtype) * di ** -0.5,
+        "w_dt": jax.random.normal(ks[3], (dt_rank, di), dtype) * dt_rank ** -0.5,
+        "dt_bias": jnp.log(jnp.exp(jnp.linspace(1e-3, 1e-1, di)) - 1).astype(dtype),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32),
+                                  (di, 1))),
+        "D": jnp.ones((di,), jnp.float32),
+        "w_out": jax.random.normal(ks[4], (di, d), dtype) * di ** -0.5,
+    }
+
+
+def _mamba_scan(u, dt_, B_, C_, A, chunk: int, h0=None):
+    """u/dt_ (B,S,Di), B_/C_ (B,S,N), A (Di,N).  Chunked selective scan.
+
+    Returns (y (B,S,Di), h_last (B,Di,N)).
+    """
+    b, s, di = u.shape
+    n = B_.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        z3 = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        u, dt_, B_, C_ = z3(u), z3(dt_), z3(B_), z3(C_)
+        # padded steps must be identity updates (dt = 0 -> decay 1, input 0)
+        # or the carried final state would be spuriously decayed
+        valid = (jnp.arange(s + pad) < s).astype(dt_.dtype)
+        dt_ = dt_ * valid[None, :, None]
+    nc = (s + pad) // chunk
+    rs = lambda a: a.reshape(b, nc, chunk, -1).transpose(1, 0, 2, 3)
+    uc, dtc, Bc, Cc = rs(u), rs(dt_), rs(B_), rs(C_)
+
+    def per_chunk(h, inp):
+        uj, dtj, Bj, Cj = inp                       # (B, L, Di/N)
+        dA = dtj[..., None] * A[None, None]         # (B, L, Di, N) log-decay
+        dBu = (dtj * uj)[..., None] * Bj[:, :, None, :]
+        # associative scan over the chunk: state map h -> a*h + b composes as
+        # (a2*a1, a2*b1 + b2); numerically stable (a = exp(dA) <= 1 always,
+        # unlike the cumsum-of-ratios trick which overflows on strong decay).
+        a = jnp.exp(dA)
+
+        def combine(x, y):
+            a1, b1 = x
+            a2, b2 = y
+            return a1 * a2, a2 * b1 + b2
+
+        prod_a, hs_b = jax.lax.associative_scan(combine, (a, dBu), axis=1)
+        hs = prod_a * h[:, None] + hs_b             # (B, L, Di, N)
+        y = jnp.einsum("blin,bln->bli", hs, Cj)
+        return hs[:, -1], y
+
+    h = jnp.zeros((b, di, n), jnp.float32) if h0 is None else h0
+    h, ys = _scan(jax.checkpoint(per_chunk), h, (uc, dtc, Bc, Cc))
+    y = ys.transpose(1, 0, 2, 3).reshape(b, s + pad, di)[:, :s]
+    return y, h
+
+
+def mamba_layer(p, x, cfg: ArchConfig, state=None, chunk: int = 0,
+                return_state: bool = False):
+    if not chunk:  # adaptive: longer chunks at long sequence lengths
+        chunk = 128 if x.shape[1] <= 8192 else 512
+    """Full-sequence mamba mixer.  ``return_state`` also yields the decode
+    state {"conv" (B,K,Di) raw-input tail, "ssm" (B,Di,N)}."""
+    b, s, d = x.shape
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_d_state
+    xraw, z = jnp.split(x @ p["w_in"], 2, axis=-1)   # (B,S,Di) each
+    # causal depthwise conv
+    k = p["conv_w"].shape[0]
+    xpad = jnp.pad(xraw, ((0, 0), (k - 1, 0), (0, 0)))
+    conv = sum(xpad[:, i: i + s] * p["conv_w"][i] for i in range(k))
+    xin = jax.nn.silu(conv + p["conv_b"])
+
+    bcdt = xin @ p["w_bcdt"]
+    B_ = bcdt[..., :n].astype(jnp.float32)
+    C_ = bcdt[..., n: 2 * n].astype(jnp.float32)
+    dt_ = jax.nn.softplus(bcdt[..., 2 * n:] @ p["w_dt"]
+                          + p["dt_bias"]).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])
+    h0 = state["ssm"] if state is not None else None
+    y, h_last = _mamba_scan(xin.astype(jnp.float32), dt_, B_, C_, A, chunk, h0)
+    y = y + p["D"] * xin.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ p["w_out"]
+    if return_state:
+        conv_tail = xpad[:, -k:, :]  # last K raw inputs (pre-activation)
+        return out, {"conv": conv_tail, "ssm": h_last}
+    return out
+
+
+def mamba_decode(p, x, cfg: ArchConfig, state, pos):
+    """One-token decode with carried (conv window, ssm state)."""
+    b, s, d = x.shape  # s == 1
+    n = cfg.ssm_d_state
+    xin, z = jnp.split(x @ p["w_in"], 2, axis=-1)     # (B,1,Di)
+    conv_buf = jnp.concatenate([state["conv"][:, 1:], xin], axis=1)  # (B,K,Di)
+    conv = (conv_buf * p["conv_w"][None]).sum(1, keepdims=True)
+    xin = jax.nn.silu(conv + p["conv_b"])
+    bcdt = xin @ p["w_bcdt"]
+    B_ = bcdt[..., :n].astype(jnp.float32)
+    C_ = bcdt[..., n: 2 * n].astype(jnp.float32)
+    dt_ = jax.nn.softplus(bcdt[..., 2 * n:] @ p["w_dt"]
+                          + p["dt_bias"]).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])
+    h = state["ssm"]                                  # (B, Di, N)
+    dA = jnp.exp(dt_[..., None] * A)                  # (B,1,Di,N)
+    dBu = (dt_ * xin.astype(jnp.float32))[..., None] * B_[:, :, None, :]
+    h = dA[:, 0] * h + dBu[:, 0]
+    y = jnp.einsum("bin,bn->bi", h, C_[:, 0])[:, None, :]
+    y = y + p["D"] * xin.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ p["w_out"], {"conv": conv_buf, "ssm": h}
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 ("Finch") — data-dependent decay linear attention, chunked
+# ---------------------------------------------------------------------------
+
+def init_rwkv(rng, cfg: ArchConfig, dtype) -> dict:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    ks = jax.random.split(rng, 10)
+    std = d ** -0.5
+    lora = max(d // 16, 32)
+    return {
+        "mu": 0.5 * jnp.ones((5, d), dtype),  # token-shift mix for r,k,v,w,g
+        "w_r": jax.random.normal(ks[0], (d, d), dtype) * std,
+        "w_k": jax.random.normal(ks[1], (d, d), dtype) * std,
+        "w_v": jax.random.normal(ks[2], (d, d), dtype) * std,
+        "w_g": jax.random.normal(ks[3], (d, d), dtype) * std,
+        "w_o": jax.random.normal(ks[4], (d, d), dtype) * std,
+        # data-dependent decay: w_t = exp(-exp(w0 + lora))
+        "w0": jnp.full((d,), -6.0, dtype),
+        "w_lora_a": jax.random.normal(ks[5], (d, lora), dtype) * std,
+        "w_lora_b": jax.random.normal(ks[6], (lora, d), dtype) * lora ** -0.5,
+        "u": jax.random.normal(ks[7], (d,), dtype) * 0.1,  # bonus
+        "ln_g": jnp.zeros((d,), dtype),
+    }
+
+
+def _rwkv_chunk(r, k, v, logw, u, h0, chunk: int):
+    """r/k/v/logw (B,S,H,hd) with logw <= 0; u (H,hd); h0 (B,H,hd,hd).
+
+    Chunked evaluation of o_t = r_t . (S_{t-1} + u k_t v_t^T),
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T  (decay on the k-dimension).
+    """
+    b, s, h, hd = r.shape
+    pad = (-s) % chunk
+    if pad:
+        z = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = z(r), z(k), z(v)
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = (s + pad) // chunk
+    rs = lambda a: a.reshape(b, nc, chunk, h, hd).transpose(1, 0, 3, 2, 4)
+    rc, kc, vc, wc = rs(r), rs(k), rs(v), rs(logw)   # (nc, B, H, L, hd)
+
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), k=-1)
+
+    def per_chunk(S, inp):
+        rj, kj, vj, wj = inp                         # (B, H, L, hd)
+        cl = jnp.cumsum(wj, axis=2)                  # cumulative log decay
+        cl_prev = cl - wj                            # up to t-1
+        # inter-chunk: r_t decayed against incoming state
+        o_inter = jnp.einsum("bhld,bhde->bhle", rj * jnp.exp(cl_prev), S)
+        # intra-chunk factored form: exp(-cl_j) stays bounded because the
+        # per-step log-decay is clamped (see rwkv_layer) so |cl| <= CLAMP*L
+        scores = jnp.einsum("bhid,bhjd->bhij",
+                            rj * jnp.exp(cl_prev), kj * jnp.exp(-cl))
+        # ratio exp(cl_prev_i - cl_j) is a valid decay only for j < i; mask
+        scores = scores * tri[None, None]
+        diag = jnp.einsum("bhid,bhid->bhi", rj * u[None, :, None, :], kj)
+        o = o_inter + jnp.einsum("bhij,bhje->bhie", scores, vj) \
+            + diag[..., None] * vj
+        S = (jnp.exp(cl[:, :, -1:, :]).transpose(0, 1, 3, 2) * S
+             + jnp.einsum("bhjd,bhje->bhde", kj * jnp.exp(cl[:, :, -1:, :] - cl), vj))
+        return S, o
+
+    S0 = jnp.zeros((b, h, hd, hd), jnp.float32) if h0 is None else h0
+    S, os_ = _scan(jax.checkpoint(per_chunk), S0, (rc, kc, vc, wc))
+    o = os_.transpose(1, 0, 3, 2, 4).reshape(b, s + pad, h, hd)[:, :s]
+    return o, S
+
+
+def rwkv_layer(p, x, cfg: ArchConfig, state=None, chunk: int = 0,
+               return_state: bool = False):
+    b, s, d = x.shape
+    if not chunk:  # adaptive; decay clamp keeps exp(0.35*chunk) in fp32 range
+        chunk = 32 if s <= 4096 else 128
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    xs = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]  # token shift
+    mix = lambda i: x + (xs - x) * p["mu"][i]
+    r = mix(0) @ p["w_r"]
+    k = mix(1) @ p["w_k"]
+    v = mix(2) @ p["w_v"]
+    # per-step log-decay clamped to >= -0.35 so the chunked factored form
+    # (exp(-cl) with |cl| <= 0.35*chunk) cannot overflow fp32.  Real RWKV6
+    # permits faster decay; the clamp (state halving every ~2 tokens at the
+    # extreme) is a documented numerical simplification.
+    logw = jnp.maximum(-jnp.exp(jnp.clip(
+        (p["w0"] + jnp.tanh(mix(3) @ p["w_lora_a"]) @ p["w_lora_b"])
+        .astype(jnp.float32), -20.0, 2.0)), -0.35)    # (B,S,D), in [-0.35, 0)
+    g = jax.nn.silu(mix(4) @ p["w_g"])
+
+    hsplit = lambda a: a.reshape(b, s, h, hd)
+    h0 = state["S"] if state is not None else None
+    o, S = _rwkv_chunk(hsplit(r).astype(jnp.float32),
+                       hsplit(k).astype(jnp.float32),
+                       hsplit(v).astype(jnp.float32),
+                       hsplit(logw),
+                       p["u"].astype(jnp.float32).reshape(h, hd),
+                       h0, chunk)
+    o = o.reshape(b, s, d).astype(x.dtype)
+    o = rms_norm(o, p["ln_g"], cfg.norm_eps) * g
+    out = o @ p["w_o"]
+    if return_state:
+        return out, {"S": S, "shift": x[:, -1:, :]}
+    return out
+
+
+def rwkv_decode(p, x, cfg: ArchConfig, state, pos):
+    """state = {"S": (B,H,hd,hd), "shift": (B,1,D)}."""
+    b, s, d = x.shape
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    xs = state["shift"]
+    mix = lambda i: x + (xs - x) * p["mu"][i]
+    r = (mix(0) @ p["w_r"]).reshape(b, h, hd).astype(jnp.float32)
+    k = (mix(1) @ p["w_k"]).reshape(b, h, hd).astype(jnp.float32)
+    v = (mix(2) @ p["w_v"]).reshape(b, h, hd).astype(jnp.float32)
+    logw = -jnp.exp(jnp.clip(
+        (p["w0"] + jnp.tanh(mix(3) @ p["w_lora_a"]) @ p["w_lora_b"])
+        .astype(jnp.float32), -20.0, 2.0)).reshape(b, h, hd)
+    g = jax.nn.silu(mix(4) @ p["w_g"])
+    u = p["u"].astype(jnp.float32).reshape(h, hd)
+    S = state["S"]
+    o = jnp.einsum("bhd,bhde->bhe", r, S) + (r * u * k).sum(-1, keepdims=True) * v
+    S = jnp.exp(logw)[..., None] * S + k[..., None] * v[..., None, :]
+    o = o.reshape(b, 1, d).astype(x.dtype)
+    o = rms_norm(o, p["ln_g"], cfg.norm_eps) * g
+    return o @ p["w_o"], {"S": S, "shift": x}
+
+
+# ---------------------------------------------------------------------------
+# RWKV channel mix (used as the "dense" mlp for the ssm family)
+# ---------------------------------------------------------------------------
+
+def init_rwkv_cmix(rng, d: int, d_ff: int, dtype) -> dict:
+    ks = jax.random.split(rng, 3)
+    return {
+        "mu": 0.5 * jnp.ones((2, d), dtype),
+        "w_k": jax.random.normal(ks[0], (d, d_ff), dtype) * d ** -0.5,
+        "w_v": jax.random.normal(ks[1], (d_ff, d), dtype) * d_ff ** -0.5,
+        "w_r": jax.random.normal(ks[2], (d, d), dtype) * d ** -0.5,
+    }
+
+
+def rwkv_cmix(p, x, shift_state=None):
+    if shift_state is None:
+        xs = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        xs = shift_state
+    kx = x + (xs - x) * p["mu"][0]
+    rx = x + (xs - x) * p["mu"][1]
+    k = jnp.square(jax.nn.relu(kx @ p["w_k"]))
+    return jax.nn.sigmoid(rx @ p["w_r"]) * (k @ p["w_v"])

@@ -1,0 +1,234 @@
+"""Model assembly: composable transformer from an ArchConfig.
+
+The layer stack is grouped by its repeating pattern (ArchConfig.scan_pattern)
+and executed with ``lax.scan`` over pattern periods — one HLO body regardless
+of depth, which keeps 512-way SPMD compiles fast and makes the per-layer
+collective schedule explicit in the roofline analysis.  Non-periodic prefix
+layers (e.g. deepseek's first 3 dense layers) run unrolled.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, LayerSpec
+from . import layers as L
+
+# Scan-unroll control lives in layers.py so one flag covers the layer-stack
+# scans here AND the kv-chunk / ssm-chunk scans inside the mixers.
+from .layers import _scan, set_scan_unroll  # noqa: F401
+
+
+def _init_mixer(rng, cfg: ArchConfig, spec: LayerSpec, dtype):
+    if spec.mixer in ("attn", "attn_local"):
+        return L.init_attention(rng, cfg, dtype)
+    if spec.mixer == "mla":
+        return L.init_mla(rng, cfg, dtype)
+    if spec.mixer == "mamba":
+        return L.init_mamba(rng, cfg, dtype)
+    if spec.mixer == "rwkv":
+        return L.init_rwkv(rng, cfg, dtype)
+    if spec.mixer == "cross":
+        return L.init_cross_attention(rng, cfg, dtype)
+    raise ValueError(spec.mixer)
+
+
+def _init_mlp(rng, cfg: ArchConfig, spec: LayerSpec, dtype):
+    if spec.mlp == "moe":
+        return L.init_moe(rng, cfg, dtype)
+    if cfg.family == "ssm":
+        return L.init_rwkv_cmix(rng, cfg.d_model, cfg.d_ff, dtype)
+    return L.init_mlp(rng, cfg.d_model, cfg.d_ff, dtype)
+
+
+def init_layer(rng, cfg: ArchConfig, spec: LayerSpec, dtype) -> dict:
+    k1, k2 = jax.random.split(rng)
+    return {
+        "norm1": jnp.zeros((cfg.d_model,), dtype),
+        "mixer": _init_mixer(k1, cfg, spec, dtype),
+        "norm2": jnp.zeros((cfg.d_model,), dtype),
+        "mlp": _init_mlp(k2, cfg, spec, dtype),
+    }
+
+
+def apply_layer(p, x, cfg: ArchConfig, spec: LayerSpec, positions,
+                context=None, causal=True):
+    """Pre-norm residual block.  Returns (x, aux_loss)."""
+    h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    if spec.mixer in ("attn", "attn_local"):
+        m = L.attention_layer(p["mixer"], h, cfg, spec, positions, causal)
+    elif spec.mixer == "mla":
+        m = L.mla_layer(p["mixer"], h, cfg, spec, positions)
+    elif spec.mixer == "mamba":
+        m = L.mamba_layer(p["mixer"], h, cfg)
+    elif spec.mixer == "rwkv":
+        m = L.rwkv_layer(p["mixer"], h, cfg)
+    elif spec.mixer == "cross":
+        m = L.cross_attention_layer(p["mixer"], h, context, cfg)
+    else:
+        raise ValueError(spec.mixer)
+    x = x + m
+
+    h = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if spec.mlp == "moe":
+        o, aux = L.moe_layer(p["mlp"], h, cfg, cfg.act)
+    elif cfg.family == "ssm":
+        o = L.rwkv_cmix(p["mlp"], h)
+    else:
+        o = L.mlp_layer(p["mlp"], h, cfg.act)
+    return x + o, aux
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init
+# ---------------------------------------------------------------------------
+
+def init_params(rng, cfg: ArchConfig) -> dict:
+    dtype = L.dt(cfg)
+    keys = jax.random.split(rng, cfg.n_layers + 8)
+    prefix_n, n_steps, pattern = cfg.scan_pattern()
+    specs = cfg.layer_specs()
+
+    params: dict = {
+        "embed": jax.random.normal(keys[-1], (cfg.vocab, cfg.d_model),
+                                   dtype) * 0.02,
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(
+            keys[-2], (cfg.d_model, cfg.vocab), dtype) * cfg.d_model ** -0.5
+
+    params["prefix"] = [init_layer(keys[i], cfg, specs[i], dtype)
+                        for i in range(prefix_n)]
+    # scan-stacked pattern params: for each position in the pattern, a pytree
+    # with leading (n_steps,) axis
+    stacked = []
+    for pos, spec in enumerate(pattern):
+        per_step = [init_layer(keys[prefix_n + s * len(pattern) + pos], cfg,
+                               spec, dtype) for s in range(n_steps)]
+        stacked.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_step))
+    params["pattern"] = stacked
+
+    if cfg.enc_dec:
+        enc_spec = LayerSpec(mixer="attn", mlp="dense", use_rope=False)
+        enc_layers = [init_layer(k, cfg, enc_spec, dtype)
+                      for k in jax.random.split(keys[-3], cfg.n_enc_layers)]
+        params["encoder"] = jax.tree.map(lambda *xs: jnp.stack(xs), *enc_layers)
+        params["enc_norm"] = jnp.zeros((cfg.d_model,), dtype)
+        # conv frontend STUB: input_specs provides precomputed frame
+        # embeddings; a single projection stands in for the conv stack.
+        params["frame_proj"] = jax.random.normal(
+            keys[-4], (cfg.d_model, cfg.d_model), dtype) * cfg.d_model ** -0.5
+    if cfg.cross_attn_every:
+        # modality STUB: image patch embeddings arrive precomputed
+        params["img_proj"] = jax.random.normal(
+            keys[-5], (cfg.d_model, cfg.d_model), dtype) * cfg.d_model ** -0.5
+    if cfg.mtp:
+        params["mtp_layer"] = init_layer(keys[-6], cfg,
+                                         LayerSpec("attn", "dense"), dtype)
+        params["mtp_norm"] = jnp.zeros((cfg.d_model,), dtype)
+        params["mtp_proj"] = jax.random.normal(
+            keys[-7], (2 * cfg.d_model, cfg.d_model), dtype) * (2 * cfg.d_model) ** -0.5
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _encode_context(params, cfg: ArchConfig, context):
+    """Modality frontend stub -> encoder stack (whisper) or projection (vlm)."""
+    if context is None:
+        return None
+    dtype = L.dt(cfg)
+    ctx = context.astype(dtype)
+    if cfg.enc_dec:
+        x = ctx @ params["frame_proj"]
+        pos = jnp.arange(x.shape[1])
+        enc_spec = LayerSpec(mixer="attn", mlp="dense", use_rope=False)
+
+        def body(h, layer_p):
+            h, _ = apply_layer(layer_p, h, cfg, enc_spec, pos, causal=False)
+            return h, None
+        x, _ = _scan(body, x, params["encoder"])
+        return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+    if cfg.cross_attn_every:
+        return ctx @ params["img_proj"]
+    return ctx
+
+
+def forward(params, cfg: ArchConfig, tokens, context=None,
+            return_hidden: bool = False, remat: str = "none",
+            mesh=None, seq_shard: bool = True):
+    """tokens (B, S) -> logits (B, S, V).  ``context``: frame/patch embeds.
+
+    ``remat``: "full" recomputes each pattern period in the backward pass
+    (only the residual stream is saved — the activation-memory policy that
+    makes 100-layer train_4k fit); "none" saves everything.
+    ``mesh``: enables residual-stream sharding constraints (batch over dp,
+    sequence over "model": Megatron-style sequence parallelism).
+    """
+    from . import sharding as S
+    prefix_n, n_steps, pattern = cfg.scan_pattern()
+    specs = cfg.layer_specs()
+    b, s = tokens.shape
+    positions = jnp.arange(s)
+    x = params["embed"][tokens]
+    ctx = _encode_context(params, cfg, context)
+
+    constrain = (lambda h: S.activation_constraint(h, mesh, seq_shard)) \
+        if mesh is not None else (lambda h: h)
+    x = constrain(x)
+
+    def one_layer(layer_params, h, spec):
+        h, aux = apply_layer(layer_params, h, cfg, spec, positions,
+                             context=ctx)
+        return constrain(h), aux
+
+    aux_total = jnp.zeros((), jnp.float32)
+    for i in range(prefix_n):
+        f = one_layer
+        if remat == "full":
+            f = jax.checkpoint(one_layer, static_argnums=(2,))
+        x, aux = f(params["prefix"][i], x, specs[i])
+        aux_total += aux
+
+    if n_steps:
+        def body(carry, step_params):
+            h, aux_acc = carry
+            for pos, spec in enumerate(pattern):
+                h, aux = one_layer(step_params[pos], h, spec)
+                aux_acc += aux
+            return (h, aux_acc), None
+
+        if remat == "full":
+            body = jax.checkpoint(body, prevent_cse=False)
+        (x, aux_total), _ = _scan(body, (x, aux_total), params["pattern"])
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    if cfg.final_softcap > 0:
+        logits = cfg.final_softcap * jnp.tanh(
+            logits.astype(jnp.float32) / cfg.final_softcap).astype(logits.dtype)
+    if return_hidden:
+        return logits, x, aux_total
+    return logits, aux_total
+
+
+def mtp_logits(params, cfg: ArchConfig, hidden, tokens):
+    """DeepSeek MTP: one extra layer predicting token t+2 from
+    [h_t ; emb(token_{t+1})] (single-depth MTP as in the paper)."""
+    emb_next = params["embed"][tokens]  # tokens already shifted by caller
+    h = jnp.concatenate([hidden, emb_next], axis=-1) @ params["mtp_proj"]
+    h, _ = apply_layer(params["mtp_layer"], h, cfg,
+                       LayerSpec("attn", "dense"),
+                       jnp.arange(h.shape[1]))
+    h = L.rms_norm(h, params["mtp_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return h @ head

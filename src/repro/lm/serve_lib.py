@@ -1,0 +1,252 @@
+"""Serving: prefill (build caches) and single-token decode steps.
+
+Cache layout mirrors the model's scan grouping: ``prefix`` is a list of
+per-layer caches, ``pattern`` a list (per pattern position) of stacked
+(n_steps, ...) caches so decode scans layers exactly like training does.
+
+Cache kinds per mixer:
+  attn / attn_local : {"k","v"} (B, Hkv, S_max, hd)
+  mla               : {"ckv","k_rope"} (B, S_max, r) — absorbed decode,
+                      the MLA serving win (9x smaller than full KV)
+  mamba             : {"conv" (B,K,Di), "ssm" (B,Di,N)}
+  rwkv              : {"S" (B,H,hd,hd), "shift" (B,1,D)}
+  cross             : {"ck","cv"} (B, Hkv, T_ctx, hd) — static after prefill
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, LayerSpec
+from . import layers as L
+from . import model as M
+
+
+def _layer_cache_shape(cfg: ArchConfig, spec: LayerSpec, batch: int,
+                       max_len: int, dtype):
+    hd = cfg.resolved_head_dim
+    if spec.mixer in ("attn", "attn_local"):
+        kv = jax.ShapeDtypeStruct((batch, cfg.n_kv_heads, max_len, hd), dtype)
+        return {"k": kv, "v": kv}
+    if spec.mixer == "mla":
+        return {"ckv": jax.ShapeDtypeStruct((batch, max_len, cfg.kv_lora_rank), dtype),
+                "k_rope": jax.ShapeDtypeStruct((batch, max_len, cfg.qk_rope_dim), dtype)}
+    if spec.mixer == "mamba":
+        di = cfg.ssm_expand * cfg.d_model
+        return {"conv": jax.ShapeDtypeStruct((batch, cfg.ssm_conv, di), dtype),
+                "ssm": jax.ShapeDtypeStruct((batch, di, cfg.ssm_d_state), jnp.float32)}
+    if spec.mixer == "rwkv":
+        h = cfg.d_model // cfg.rwkv_head_dim
+        return {"S": jax.ShapeDtypeStruct((batch, h, cfg.rwkv_head_dim,
+                                           cfg.rwkv_head_dim), jnp.float32),
+                "shift": jax.ShapeDtypeStruct((batch, 1, cfg.d_model), dtype),
+                "cmix_shift": jax.ShapeDtypeStruct((batch, 1, cfg.d_model), dtype)}
+    if spec.mixer == "cross":
+        t = cfg.n_audio_frames if cfg.enc_dec else cfg.n_image_tokens
+        kv = jax.ShapeDtypeStruct((batch, cfg.n_kv_heads, t, hd), dtype)
+        return {"ck": kv, "cv": kv}
+    raise ValueError(spec.mixer)
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_len: int):
+    """ShapeDtypeStruct cache pytree (dry-run input)."""
+    dtype = jnp.dtype(cfg.dtype)
+    prefix_n, n_steps, pattern = cfg.scan_pattern()
+    specs = cfg.layer_specs()
+    stack = lambda tree: jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n_steps,) + s.shape, s.dtype), tree)
+    return {
+        "prefix": [_layer_cache_shape(cfg, specs[i], batch, max_len, dtype)
+                   for i in range(prefix_n)],
+        "pattern": [stack(_layer_cache_shape(cfg, spec, batch, max_len, dtype))
+                    for spec in pattern],
+    }
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    """Zero-filled concrete cache (small configs / tests)."""
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        abstract_cache(cfg, batch, max_len))
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def decode_layer(p, x, cfg: ArchConfig, spec: LayerSpec, cache, pos):
+    h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    if spec.mixer in ("attn", "attn_local"):
+        m, cache = L.attention_decode(p["mixer"], h, cfg, spec, cache, pos)
+    elif spec.mixer == "mla":
+        m, cache = L.mla_decode(p["mixer"], h, cfg, spec, cache, pos)
+    elif spec.mixer == "mamba":
+        m, cache = L.mamba_decode(p["mixer"], h, cfg, cache, pos)
+    elif spec.mixer == "rwkv":
+        cmix_shift = cache["cmix_shift"]
+        m, cache = L.rwkv_decode(p["mixer"], h, cfg, cache, pos)
+        cache = dict(cache, cmix_shift=cmix_shift)
+    elif spec.mixer == "cross":
+        m = _cross_decode(p["mixer"], h, cfg, cache)
+    else:
+        raise ValueError(spec.mixer)
+    x = x + m
+    h = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+    if spec.mlp == "moe":
+        o, _ = L.moe_layer(p["mlp"], h, cfg, cfg.act)
+    elif cfg.family == "ssm":
+        o = L.rwkv_cmix(p["mlp"], h, shift_state=cache["cmix_shift"])
+        cache = dict(cache, cmix_shift=h)
+    else:
+        o = L.mlp_layer(p["mlp"], h, cfg.act)
+    return x + o, cache
+
+
+def _cross_decode(p, x, cfg: ArchConfig, cache):
+    """Cross-attention against the static prefilled context KV."""
+    q = jnp.einsum("bsd,dhe->bhse", x, p["wq"])
+    o = L.chunked_attention(q, cache["ck"], cache["cv"], causal=False,
+                            chunk=min(cache["ck"].shape[2], 512))
+    return jnp.einsum("bhse,hed->bsd", o, p["wo"])
+
+
+def make_serve_step(cfg: ArchConfig, mesh=None):
+    """serve_step(params, cache, tokens (B,1), pos ()) ->
+    (logits (B,1,V), cache)."""
+    prefix_n, n_steps, pattern = cfg.scan_pattern()
+    specs = cfg.layer_specs()
+
+    def serve_step(params, cache, tokens, pos):
+        x = params["embed"][tokens]
+        new_prefix = []
+        for i in range(prefix_n):
+            x, c = decode_layer(params["prefix"][i], x, cfg, specs[i],
+                                cache["prefix"][i], pos)
+            new_prefix.append(c)
+
+        if n_steps:
+            def body(h, xs):
+                step_params, step_cache = xs
+                new_caches = []
+                for j, spec in enumerate(pattern):
+                    h, c = decode_layer(step_params[j], h, cfg, spec,
+                                        step_cache[j], pos)
+                    new_caches.append(c)
+                return h, new_caches
+
+            x, new_pattern = M._scan(
+                body, x, (params["pattern"], cache["pattern"]))
+        else:
+            new_pattern = cache["pattern"]
+
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = x @ head
+        if cfg.final_softcap > 0:
+            logits = cfg.final_softcap * jnp.tanh(
+                logits.astype(jnp.float32) / cfg.final_softcap
+            ).astype(logits.dtype)
+        return logits, {"prefix": new_prefix, "pattern": new_pattern}
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+def _prefill_layer(p, x, cfg, spec, positions, ctx, batch, max_len):
+    """apply_layer + produce this layer's cache filled with the sequence."""
+    dtype = jnp.dtype(cfg.dtype)
+    b, s, _ = x.shape
+    h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    cache = None
+    if spec.mixer in ("attn", "attn_local"):
+        q, k, v = L.attention_qkv(p["mixer"], h, cfg, positions)
+        window = cfg.window if spec.mixer == "attn_local" else 0
+        o = L.chunked_attention(q, k, v, causal=True, window=window,
+                                softcap=cfg.attn_softcap)
+        m = jnp.einsum("bhse,hed->bsd", o, p["mixer"]["wo"])
+        pad = max_len - s
+        padk = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0))).astype(dtype)
+        padv = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0))).astype(dtype)
+        cache = {"k": padk, "v": padv}
+    elif spec.mixer == "mla":
+        qn, qr, ckv, krope = L.mla_compress(p["mixer"], h, cfg, positions)
+        m = L.mla_layer(p["mixer"], h, cfg, spec, positions)
+        pad = max_len - s
+        cache = {"ckv": jnp.pad(ckv, ((0, 0), (0, pad), (0, 0))).astype(dtype),
+                 "k_rope": jnp.pad(krope[:, 0], ((0, 0), (0, pad), (0, 0))).astype(dtype)}
+    elif spec.mixer == "mamba":
+        m, cache = L.mamba_layer(p["mixer"], h, cfg, return_state=True)
+    elif spec.mixer == "rwkv":
+        m, cache = L.rwkv_layer(p["mixer"], h, cfg, return_state=True)
+    elif spec.mixer == "cross":
+        m = L.cross_attention_layer(p["mixer"], h, ctx, cfg)
+        ctxn = L.rms_norm(ctx, p["mixer"]["ctx_norm"], cfg.norm_eps)
+        cache = {"ck": jnp.einsum("btd,dhe->bhte", ctxn, p["mixer"]["wk"]).astype(dtype),
+                 "cv": jnp.einsum("btd,dhe->bhte", ctxn, p["mixer"]["wv"]).astype(dtype)}
+    x = x + m
+    h2 = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+    if spec.mlp == "moe":
+        o, _ = L.moe_layer(p["mlp"], h2, cfg, cfg.act)
+    elif cfg.family == "ssm":
+        o = L.rwkv_cmix(p["mlp"], h2)
+        cache = dict(cache, cmix_shift=h2[:, -1:, :])
+    else:
+        o = L.mlp_layer(p["mlp"], h2, cfg.act)
+    return x + o, cache
+
+
+def make_prefill(cfg: ArchConfig, max_len: Optional[int] = None, mesh=None,
+                 remat: str = "full"):
+    """prefill(params, tokens, context=None) -> (last_logits, cache)."""
+    prefix_n, n_steps, pattern = cfg.scan_pattern()
+    specs = cfg.layer_specs()
+
+    def prefill(params, tokens, context=None):
+        from . import sharding as S
+        b, s = tokens.shape
+        ml = max_len or s
+        positions = jnp.arange(s)
+        x = params["embed"][tokens]
+        ctx = M._encode_context(params, cfg, context)
+        constrain = (lambda h: S.activation_constraint(h, mesh)) \
+            if mesh is not None else (lambda h: h)
+        x = constrain(x)
+
+        prefix_cache = []
+        for i in range(prefix_n):
+            f = _prefill_layer
+            if remat == "full":
+                # cfg/spec AND batch/max_len are python statics
+                f = jax.checkpoint(_prefill_layer, static_argnums=(2, 3, 6, 7))
+            x, c = f(params["prefix"][i], x, cfg, specs[i], positions, ctx,
+                     b, ml)
+            x = constrain(x)
+            prefix_cache.append(c)
+
+        if n_steps:
+            def body(h, step_params):
+                caches = []
+                for j, spec in enumerate(pattern):
+                    h, c = _prefill_layer(step_params[j], h, cfg, spec,
+                                          positions, ctx, b, ml)
+                    h = constrain(h)
+                    caches.append(c)
+                return h, caches
+            if remat == "full":
+                body = jax.checkpoint(body, prevent_cse=False)
+            x, pattern_cache = M._scan(body, x, params["pattern"])
+        else:
+            pattern_cache = []
+
+        x = L.rms_norm(x[:, -1:, :], params["final_norm"], cfg.norm_eps)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = x @ head
+        return logits, {"prefix": prefix_cache, "pattern": pattern_cache}
+
+    return prefill

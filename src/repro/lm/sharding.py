@@ -1,0 +1,241 @@
+"""Sharding rules: param-path -> PartitionSpec over the production mesh.
+
+Baseline strategy (EXPERIMENTS.md records hillclimbed deviations per arch):
+  * tensor parallel over "model": attention heads, ffn hidden, MoE experts,
+    SSM/RWKV channels, vocab;
+  * ZeRO/FSDP over "data": the largest remaining dim of every weight is
+    sharded over the data axis (params, grads and optimizer states all
+    follow), so per-device memory scales with 1/(data*model);
+  * batch over ("pod", "data"); residual stream sequence-sharded over
+    "model" between layers (Megatron-style sequence parallelism) so
+    activation memory also divides by the model axis.
+
+Dims that are smaller than the axis they would shard over fall back to
+replication (e.g. 8 KV heads on a 16-way model axis) — the roofline notes
+where that costs us.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+DP_AXES = ("pod", "data")   # multi-pod batch axes (pod absent on single pod)
+TP = "model"
+FSDP = "data"
+
+# Perf knob (§Perf): shard MoE experts over BOTH mesh axes (full 2-D expert
+# parallelism — tokens travel via all-to-all instead of expert weights being
+# FSDP-gathered every layer).
+EXPERT_2D = False
+
+
+def set_expert_2d(v: bool) -> None:
+    global EXPERT_2D
+    EXPERT_2D = v
+
+
+def _fit2(dim_size: int, mesh) -> tuple | None:
+    """('data','model') combined sharding when it divides the dim."""
+    axes = tuple(a for a in (FSDP, TP) if a in mesh.axis_names)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return axes if (len(axes) == 2 and dim_size >= n and dim_size % n == 0) \
+        else None
+
+
+def _dp_axes(mesh: Mesh):
+    return tuple(a for a in DP_AXES if a in mesh.axis_names)
+
+
+def batch_spec(mesh: Mesh) -> P:
+    return P(_dp_axes(mesh),)
+
+
+# rules: (path regex, callable(shape, mesh) -> PartitionSpec)
+# paths look like: "pattern/0/mixer/wq", "prefix/1/mlp/w_gate", "embed", ...
+
+
+def _fit(dim_size: int, axis: str, mesh: Mesh) -> Optional[str]:
+    """Use `axis` only if it divides the dim evenly (jax rejects uneven
+    shardings on jit inputs — e.g. 8 KV heads cannot shard 16 ways)."""
+    if axis not in mesh.axis_names:
+        return None
+    n = mesh.shape[axis]
+    return axis if (dim_size >= n and dim_size % n == 0) else None
+
+
+def _with_fsdp(spec: list, shape, mesh: Mesh, fsdp_axis=FSDP) -> list:
+    """Shard the largest not-yet-sharded divisible dim over the fsdp axis."""
+    if fsdp_axis not in mesh.axis_names:
+        return spec
+    used = set()
+    for s in spec:
+        for a in ((s,) if isinstance(s, str) else (s or ())):
+            used.add(a)
+    if fsdp_axis in used:  # already consumed (e.g. 2-D expert sharding)
+        return spec
+    n = mesh.shape[fsdp_axis]
+    free = [i for i, s in enumerate(spec)
+            if s is None and shape[i] >= n and shape[i] % n == 0]
+    if not free:
+        return spec
+    big = max(free, key=lambda i: shape[i])
+    spec[big] = fsdp_axis
+    return spec
+
+
+def param_spec(path: str, shape: tuple, mesh: Mesh,
+               fsdp: bool = True, stacked: bool = False) -> P:
+    """PartitionSpec for one parameter leaf.
+
+    ``stacked``: leading dim is the scan layer axis (never sharded).
+    """
+    core = list(shape[1:]) if stacked else list(shape)
+    spec: list = [None] * len(core)
+    leaf = path.split("/")[-1]
+
+    def tp(dim_idx):
+        spec[dim_idx] = _fit(core[dim_idx], TP, mesh)
+
+    if leaf in ("embed",):                       # (V, D)
+        tp(0)
+    elif leaf == "lm_head":                      # (D, V)
+        tp(1)
+    elif leaf in ("wq", "wk", "wv"):             # (D, H, hd)
+        if len(core) == 3:
+            tp(1)
+        else:                                    # rwkv square (D, D)
+            tp(1)
+    elif leaf == "wo":                           # (H, hd, D)
+        tp(0)
+    elif leaf in ("w_gate", "w_up"):             # (D,F) or (E,D,F)
+        if len(core) == 3 and EXPERT_2D and _fit2(core[0], mesh):
+            spec[0] = _fit2(core[0], mesh)       # full 2-D EP (§Perf iter)
+        else:
+            tp(0 if len(core) == 3 else 1)       # experts / ffn hidden
+        if len(core) == 3 and spec[0] is None:
+            spec[2] = _fit(core[2], TP, mesh)
+    elif leaf == "w_down":                       # (F,D) or (E,F,D)
+        if len(core) == 3 and EXPERT_2D and _fit2(core[0], mesh):
+            spec[0] = _fit2(core[0], mesh)
+        else:
+            tp(0)
+    elif leaf in ("w_uq", "w_uk", "w_uv"):       # MLA (rank, H, d)
+        tp(1)
+    elif leaf in ("w_in", "w_bcdt"):             # mamba (D, 2Di)/(Di, *)
+        tp(1 if leaf == "w_in" else 0)
+    elif leaf in ("conv_w", "conv_b", "A_log", "D", "dt_bias"):  # (K,Di)/(Di,*)
+        tp(len(core) - 1 if leaf in ("conv_w", "conv_b", "dt_bias", "D") else 0)
+    elif leaf == "w_out":                        # mamba (Di, D)
+        tp(0)
+    elif leaf in ("w_r", "w_k", "w_v", "w_g"):   # rwkv (D, D) col-parallel
+        tp(1)
+    elif leaf == "w_o":                          # rwkv (D, D) row-parallel
+        tp(0)
+    elif leaf in ("w_lora_a", "w_lora_b"):
+        tp(1 if leaf == "w_lora_a" else 0)
+    elif leaf in ("w_dq", "w_dkv", "w_kr", "router", "mtp_proj",
+                  "frame_proj", "img_proj"):
+        pass                                     # small projections: fsdp only
+    # 1-D norms/biases stay replicated
+    if fsdp and len(core) >= 2:
+        spec = _with_fsdp(spec, core, mesh)
+    full = ([None] + spec) if stacked else spec
+    return P(*full)
+
+
+def params_shardings(params_shapes: Any, mesh: Mesh, fsdp: bool = True):
+    """Map a pytree of ShapeDtypeStruct/arrays to NamedShardings."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shapes)
+    out = []
+    for path, leaf in flat:
+        spath = "/".join(_path_str(p) for p in path)
+        stacked = spath.startswith("pattern/") or spath.startswith("encoder")
+        spec = param_spec(spath, leaf.shape, mesh, fsdp=fsdp, stacked=stacked)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def activation_constraint(x, mesh: Mesh, seq_shard: bool = True):
+    """Residual-stream constraint: batch over dp, sequence over model (SP)."""
+    dp = _dp_axes(mesh)
+    if x.ndim == 3:
+        seq = TP if (seq_shard and TP in mesh.axis_names
+                     and x.shape[1] >= mesh.shape[TP]) else None
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(dp, seq, None)))
+    return x
+
+
+def logits_constraint(x, mesh: Mesh):
+    dp = _dp_axes(mesh)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(dp, None, TP)))
+
+
+def cache_spec(path: str, shape: tuple, mesh: Mesh,
+               seq_axis_shard: Optional[str] = None) -> P:
+    """KV/state cache shardings for serving."""
+    dp = _dp_axes(mesh)
+    leaf = path.split("/")[-1]
+    stacked = path.startswith("pattern")
+    core = list(shape[1:]) if stacked else list(shape)
+    spec: list = [None] * len(core)
+    dpn = max(1, _axes_size(mesh, dp))
+    b_ok = core[0] >= dpn and core[0] % dpn == 0
+    if b_ok:
+        spec[0] = dp
+    if leaf in ("k", "v", "ck", "cv"):  # (B, Hkv, S, hd)
+        spec[1] = _fit(core[1], TP, mesh)
+        if spec[1] is None and core[2] % mesh.shape.get(TP, 1) == 0:
+            # flash-decoding layout: KV heads too few for the model axis ->
+            # shard the sequence dim instead; GSPMD turns the softmax into
+            # partial-stat reductions (tree attention)
+            spec[2] = TP
+        if seq_axis_shard and spec[2] is None and not b_ok:
+            spec[2] = seq_axis_shard
+    elif leaf in ("ckv", "k_rope"):   # MLA (B, S, r) compressed cache
+        if core[1] % mesh.shape.get(TP, 1) == 0:
+            spec[1] = TP
+        elif seq_axis_shard and not b_ok:
+            spec[1] = seq_axis_shard
+    elif leaf == "S":                 # rwkv (B, H, hd, hd)
+        spec[1] = _fit(core[1], TP, mesh)
+    elif leaf == "ssm":               # mamba (B, Di, N): channels over TP
+        spec[1] = _fit(core[1], TP, mesh)
+    elif leaf == "conv":              # mamba (B, K, Di)
+        spec[-1] = _fit(core[-1], TP, mesh)
+    full = ([None] + spec) if stacked else spec
+    return P(*full)
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def cache_shardings(cache_shapes: Any, mesh: Mesh,
+                    long_context: bool = False):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    out = []
+    seq_shard = FSDP if long_context else None
+    for path, leaf in flat:
+        spath = "/".join(_path_str(p) for p in path)
+        spec = cache_spec(spath, leaf.shape, mesh, seq_axis_shard=seq_shard)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)

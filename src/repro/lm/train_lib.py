@@ -1,0 +1,201 @@
+"""Training step: loss, remat, grad clip, optimizer, sharding glue.
+
+``make_train_step`` builds the jittable SPMD train step used both by the
+end-to-end examples (real arrays, small configs) and by the multi-pod
+dry-run (ShapeDtypeStructs, production configs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from ..optim import adam, adamw, adam8bit, apply_updates, clip_by_global_norm
+from . import model as M
+from . import sharding as S
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHParams:
+    lr: float = 3e-4
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    aux_loss_coef: float = 0.01      # MoE load balance
+    mtp_coef: float = 0.3            # deepseek MTP
+    z_loss: float = 1e-4
+    optimizer: str = "adam"          # adam | adamw | adam8bit
+    remat: str = "full"              # full | none
+    seq_shard_activations: bool = True
+
+
+def make_optimizer(hp: TrainHParams):
+    if hp.optimizer == "adam8bit":
+        return adam8bit(hp.lr, weight_decay=hp.weight_decay)
+    if hp.optimizer == "adamw":
+        return adamw(hp.lr, weight_decay=hp.weight_decay)
+    return adam(hp.lr)
+
+
+def cross_entropy(logits, labels, z_loss: float = 0.0):
+    """Token CE with fp32 logsumexp; ignores labels < 0."""
+    logits32 = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits32, axis=-1)
+    gold = jnp.take_along_axis(logits32, labels[..., None].clip(0), axis=-1)[..., 0]
+    ce = lse - gold
+    if z_loss:
+        ce = ce + z_loss * lse ** 2
+    valid = (labels >= 0).astype(jnp.float32)
+    return (ce * valid).sum() / jnp.maximum(valid.sum(), 1.0)
+
+
+def make_loss_fn(cfg: ArchConfig, hp: TrainHParams, mesh: Optional[Mesh]):
+    def loss_fn(params, batch):
+        tokens, labels = batch["tokens"], batch["labels"]
+        context = batch.get("context")
+        mesh_ctx = mesh
+
+        def fwd(params, tokens):
+            kw = dict(remat=hp.remat, mesh=mesh,
+                      seq_shard=hp.seq_shard_activations)
+            if cfg.mtp:
+                logits, hidden, aux = M.forward(params, cfg, tokens, context,
+                                                return_hidden=True, **kw)
+            else:
+                logits, aux = M.forward(params, cfg, tokens, context, **kw)
+                hidden = None
+            return logits, hidden, aux
+
+        logits, hidden, aux = fwd(params, tokens)
+        if mesh_ctx is not None:
+            logits = S.logits_constraint(logits, mesh_ctx)
+        loss = cross_entropy(logits, labels, hp.z_loss)
+        metrics = {"ce": loss}
+        if cfg.n_experts:
+            loss = loss + hp.aux_loss_coef * aux
+            metrics["aux"] = aux
+        if cfg.mtp and hidden is not None:
+            # MTP: predict t+2 from [h_t ; emb(t+1)] — shift labels by one
+            mtp_logits = M.mtp_logits(params, cfg, hidden[:, :-1], tokens[:, 1:])
+            mtp_labels = labels[:, 1:]
+            mtp_loss = cross_entropy(mtp_logits, mtp_labels)
+            loss = loss + hp.mtp_coef * mtp_loss
+            metrics["mtp"] = mtp_loss
+        return loss, metrics
+
+    return loss_fn
+
+
+def make_train_step(cfg: ArchConfig, hp: TrainHParams,
+                    mesh: Optional[Mesh] = None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics)."""
+    opt = make_optimizer(hp)
+    loss_fn = make_loss_fn(cfg, hp, mesh)
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        grads, gnorm = clip_by_global_norm(grads, hp.grad_clip)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return params, opt_state, metrics
+
+    return train_step, opt
+
+
+# ---------------------------------------------------------------------------
+# Abstract (no-allocation) init for the dry-run
+# ---------------------------------------------------------------------------
+
+def abstract_params(cfg: ArchConfig, rng=None):
+    """ShapeDtypeStructs of the full parameter pytree (never allocates)."""
+    rng = jax.random.PRNGKey(0) if rng is None else rng
+    return jax.eval_shape(lambda r: M.init_params(r, cfg), rng)
+
+
+def abstract_train_state(cfg: ArchConfig, hp: TrainHParams, mesh: Mesh):
+    """(params, opt_state) ShapeDtypeStructs with production shardings."""
+    p_shapes = abstract_params(cfg)
+    opt = make_optimizer(hp)
+    o_shapes = jax.eval_shape(opt.init, p_shapes)
+    p_shard = S.params_shardings(p_shapes, mesh)
+    o_shard = opt_state_shardings(o_shapes, p_shard, mesh)
+    p = jax.tree.map(lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                                        sharding=sh),
+                     p_shapes, p_shard)
+    o = jax.tree.map(lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                                        sharding=sh),
+                     o_shapes, o_shard)
+    return p, o
+
+
+def opt_state_shardings(opt_shapes, param_shardings, mesh: Mesh):
+    """Optimizer slots follow their parameter's sharding; scalars replicate.
+
+    Works for both dense Adam ({m,v} mirroring params) and adam8bit (whose
+    quantized slots have different shapes -> replicate small scale arrays,
+    shard q like the param when shapes match)."""
+    rep = NamedSharding(mesh, P())
+    # walk the opt tree; a leaf whose path suffix matches a param path reuses
+    # that param's sharding (Adam m/v mirror params; quantized q matches the
+    # padded flat shape -> replicate scales, shard nothing else).
+    flat_p, _ = jax.tree_util.tree_flatten_with_path(param_shardings)
+    p_by_path = {tuple(S._path_str(k) for k in path): sh for path, sh in flat_p}
+
+    def assign(path, leaf):
+        key = tuple(S._path_str(k) for k in path)
+        for start in range(len(key)):
+            sub = key[start:]
+            if sub in p_by_path:
+                return p_by_path[sub]
+        # adam8bit block-quantized slots ("...<param>/q" int8 blocks and
+        # "...<param>/s" scales): distribute blocks over the fsdp axis
+        if key and key[-1] == "v16":  # param-shaped bf16 slot: mirror param
+            for start in range(len(key)):
+                if key[start:-1] in p_by_path:
+                    return p_by_path[key[start:-1]]
+        if key and key[-1] in ("q", "s"):
+            for start in range(len(key)):
+                if key[start:-1] in p_by_path:
+                    n = mesh.shape.get(S.FSDP, 0)
+                    ax = S.FSDP if (n and leaf.shape[0] >= n
+                                    and leaf.shape[0] % n == 0) else None
+                    return NamedSharding(mesh, P(ax, *([None] * (len(leaf.shape) - 1))))
+        return rep
+
+    flat_o, treedef = jax.tree_util.tree_flatten_with_path(opt_shapes)
+    out = [assign(path, leaf) for path, leaf in flat_o]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_specs(cfg: ArchConfig, seq: int, global_batch: int, mesh: Mesh,
+                with_context: bool = True):
+    """ShapeDtypeStructs for a training batch with input shardings."""
+    dp = S.batch_spec(mesh)
+    tok = jax.ShapeDtypeStruct((global_batch, seq), jnp.int32,
+                               sharding=NamedSharding(mesh, dp))
+    batch = {"tokens": tok, "labels": tok}
+    ctx = context_spec(cfg, global_batch, mesh)
+    if ctx is not None and with_context:
+        batch["context"] = ctx
+    return batch
+
+
+def context_spec(cfg: ArchConfig, global_batch: int, mesh: Mesh):
+    """Modality-stub inputs: precomputed frame/patch embeddings."""
+    dp = S.batch_spec(mesh)
+    if cfg.enc_dec:
+        return jax.ShapeDtypeStruct(
+            (global_batch, cfg.n_audio_frames, cfg.d_model), jnp.dtype(cfg.dtype),
+            sharding=NamedSharding(mesh, P(dp[0] if dp else None, None, None)))
+    if cfg.cross_attn_every:
+        return jax.ShapeDtypeStruct(
+            (global_batch, cfg.n_image_tokens, cfg.d_model), jnp.dtype(cfg.dtype),
+            sharding=NamedSharding(mesh, P(dp[0] if dp else None, None, None)))
+    return None

@@ -1,0 +1,160 @@
+"""MD engine: the GROMACS main-loop analogue (paper Fig. 5).
+
+Conceptual step order: (1) init, (2) domain decomposition / load balance,
+(3) position exchange, (4) neighbor-list construction, (5) interaction
+evaluation, (6) special force (NNPot), (7) force reduction + update,
+(8) output.  Stages (2), (3) and the NN part of (6) live in
+``repro.core`` when running distributed; this module owns the host loop,
+the classical interactions, and checkpoint/restart fault tolerance.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Callable, Optional, Protocol
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import observables
+from .forcefield import ForceFieldConfig, classical_energy
+from .integrators import MDState, init_velocities, leapfrog_step, berendsen_rescale
+from .neighbors import NeighborList, build_neighbor_list, needs_rebuild
+from .system import System
+
+
+class ForceProvider(Protocol):
+    """NNPot-style special-force provider (paper Sec. IV-A)."""
+
+    def __call__(self, positions: jax.Array, box: jax.Array) -> tuple[jax.Array, jax.Array]:
+        """Returns (energy, forces(N,3)); forces are zero off the NN group."""
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    dt: float = 0.002                  # ps (paper Tab. II)
+    cutoff: float = 1.2                # classical cutoff
+    skin: float = 0.1                  # Verlet buffer
+    neighbor_capacity: int = 96
+    rebuild_every: int = 10            # also displacement-triggered
+    thermostat_t: Optional[float] = None
+    thermostat_tau: float = 0.5
+    checkpoint_every: int = 0          # steps; 0 = off
+    checkpoint_path: Optional[str] = None
+    ff: ForceFieldConfig = dataclasses.field(default_factory=ForceFieldConfig)
+
+
+class MDEngine:
+    """Host-side driver around a fully jitted inner step.
+
+    Fault tolerance: ``checkpoint_every`` snapshots (positions, velocities,
+    forces, step, rng) via ``repro.ckpt``; ``MDEngine.restore`` resumes a run
+    bit-exactly (deterministic integrator + stored RNG), and the *virtual*
+    decomposition in repro.core means restart works at any device count —
+    the decoupling argument from the paper.
+    """
+
+    def __init__(self, system: System, config: EngineConfig,
+                 special_force: Optional[ForceProvider] = None):
+        self.system = system
+        self.config = config
+        self.special_force = special_force
+        self._step_fn = self._build_step()
+        self.timings: dict[str, float] = {"classical": 0.0, "special": 0.0,
+                                          "integrate": 0.0, "neighbor": 0.0}
+
+    # -- construction ------------------------------------------------------
+
+    def _build_step(self):
+        cfg = self.config
+        system = self.system
+        special = self.special_force
+
+        def classical_force_fn(pos, nlist):
+            e, g = jax.value_and_grad(classical_energy)(
+                pos, system, nlist, cfg.ff, True)
+            return e, -g
+
+        @jax.jit
+        def step(state: MDState, nlist: NeighborList):
+            e_cl, f = classical_force_fn(state.positions, nlist)
+            e_sp = jnp.zeros((), f.dtype)
+            if special is not None:
+                e_sp, f_sp = special(state.positions, system.box)
+                f = f + f_sp
+            new = leapfrog_step(state, f, system.masses, system.box, cfg.dt)
+            if cfg.thermostat_t is not None:
+                v = berendsen_rescale(new.velocities, system.masses,
+                                      cfg.thermostat_t, cfg.dt, cfg.thermostat_tau)
+                new = dataclasses.replace(new, velocities=v)
+            return new, (e_cl, e_sp)
+
+        return step
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def init_state(self, positions: jax.Array, temperature: float = 300.0,
+                   seed: int = 0) -> MDState:
+        rng = jax.random.PRNGKey(seed)
+        rng, sub = jax.random.split(rng)
+        v = init_velocities(sub, self.system.masses, temperature)
+        return MDState(positions=positions, velocities=v,
+                       forces=jnp.zeros_like(positions),
+                       step=jnp.zeros((), jnp.int32), rng=rng)
+
+    def build_nlist(self, positions) -> NeighborList:
+        cfg = self.config
+        return build_neighbor_list(positions, self.system.box, cfg.cutoff,
+                                   cfg.neighbor_capacity, half=True,
+                                   skin=cfg.skin)
+
+    def run(self, state: MDState, n_steps: int,
+            observe: Optional[Callable[[MDState, dict], None]] = None,
+            observe_every: int = 10) -> MDState:
+        cfg = self.config
+        nlist = self.build_nlist(state.positions)
+        if bool(nlist.overflow):
+            raise RuntimeError("neighbor capacity exceeded at init; raise "
+                               "EngineConfig.neighbor_capacity")
+        for i in range(n_steps):
+            t0 = time.perf_counter()
+            if i % cfg.rebuild_every == 0 or bool(
+                    needs_rebuild(nlist, state.positions, self.system.box, cfg.skin)):
+                nlist = self.build_nlist(state.positions)
+                if bool(nlist.overflow):
+                    raise RuntimeError("neighbor capacity exceeded mid-run")
+            self.timings["neighbor"] += time.perf_counter() - t0
+
+            t0 = time.perf_counter()
+            state, (e_cl, e_sp) = self._step_fn(state, nlist)
+            jax.block_until_ready(state.positions)
+            self.timings["classical"] += time.perf_counter() - t0
+
+            if observe is not None and i % observe_every == 0:
+                obs = {
+                    "step": int(state.step),
+                    "e_classical": float(e_cl),
+                    "e_special": float(e_sp),
+                    "temperature": float(observables.temperature(
+                        state.velocities, self.system.masses)),
+                }
+                observe(state, obs)
+
+            if (cfg.checkpoint_every and cfg.checkpoint_path
+                    and int(state.step) % cfg.checkpoint_every == 0):
+                self.checkpoint(state, cfg.checkpoint_path)
+        return state
+
+    # -- fault tolerance ----------------------------------------------------
+
+    def checkpoint(self, state: MDState, path: str) -> None:
+        from ..ckpt.checkpoint import save_pytree
+        save_pytree(path, dataclasses.asdict(state))
+
+    @staticmethod
+    def restore(path: str) -> MDState:
+        from ..ckpt.checkpoint import load_pytree
+        d = load_pytree(path)
+        return MDState(**{k: jnp.asarray(v) for k, v in d.items()})

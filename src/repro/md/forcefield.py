@@ -1,0 +1,170 @@
+"""Classical force field: bonded terms, LJ, Coulomb (cutoff / reaction field).
+
+This is the empirical-force-field baseline the paper compares the Deep
+Potential against (Eq. 1): E = E_bonded + E_sr + E_lr.  Energies are pure
+functions of positions so forces come from ``jax.grad`` — the same
+conservative-forces contract the DP model uses (Eq. 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .neighbors import NeighborList, minimum_image
+from .system import COULOMB, System
+
+
+@dataclasses.dataclass(frozen=True)
+class ForceFieldConfig:
+    cutoff: float = 1.2             # nm (paper Tab. II: r_c = 1.2 EM/NVT/NPT)
+    use_reaction_field: bool = True  # RF correction for cutoff Coulomb
+    eps_rf: float = 78.5            # solvent dielectric for RF
+    use_pme: bool = False           # long-range via smooth PME (md/pme.py)
+    pme_grid: tuple = (32, 32, 32)
+    pme_order: int = 4
+    ewald_beta: float = 3.12        # 1/nm; erfc(beta*rc) ~ 1e-5 at rc=1.2
+
+
+# ---------------------------------------------------------------------------
+# Bonded terms
+# ---------------------------------------------------------------------------
+
+def bond_energy(pos, box, bonds, params, mask):
+    ri, rj = pos[bonds[:, 0]], pos[bonds[:, 1]]
+    dr = minimum_image(rj - ri, box)
+    # double-where: masked (padded) entries see a safe r so the backward pass
+    # never differentiates sqrt at 0 (NaN * 0 == NaN in the cotangent).
+    r2 = jnp.where(mask > 0, (dr ** 2).sum(-1), 1.0)
+    r = jnp.sqrt(r2)
+    r0, k = params[:, 0], params[:, 1]
+    return (0.5 * k * (r - r0) ** 2 * mask).sum()
+
+
+def angle_energy(pos, box, angles, params, mask):
+    ri, rj, rk = pos[angles[:, 0]], pos[angles[:, 1]], pos[angles[:, 2]]
+    v1 = minimum_image(ri - rj, box)
+    v2 = minimum_image(rk - rj, box)
+    nn = (v1 ** 2).sum(-1) * (v2 ** 2).sum(-1)
+    cos = (v1 * v2).sum(-1) / jnp.sqrt(jnp.where(mask > 0, nn, 1.0))
+    theta = jnp.arccos(jnp.clip(cos, -1 + 1e-7, 1 - 1e-7))
+    t0, k = params[:, 0], params[:, 1]
+    return (0.5 * k * (theta - t0) ** 2 * mask).sum()
+
+
+def dihedral_energy(pos, box, dihedrals, params, mask):
+    """Periodic proper dihedral: k (1 + cos(mult*phi - phi0))."""
+    p = [pos[dihedrals[:, i]] for i in range(4)]
+    b1 = minimum_image(p[1] - p[0], box)
+    b2 = minimum_image(p[2] - p[1], box)
+    b3 = minimum_image(p[3] - p[2], box)
+    n1 = jnp.cross(b1, b2)
+    n2 = jnp.cross(b2, b3)
+    nb2 = jnp.sqrt(jnp.where(mask > 0, (b2 ** 2).sum(-1), 1.0))[:, None]
+    m1 = jnp.cross(n1, b2 / nb2)
+    x = jnp.where(mask > 0, (n1 * n2).sum(-1), 1.0)
+    y = jnp.where(mask > 0, (m1 * n2).sum(-1), 0.0)
+    phi = jnp.arctan2(y, x)
+    phi0, k, mult = params[:, 0], params[:, 1], params[:, 2]
+    return (k * (1 + jnp.cos(mult * phi - phi0)) * mask).sum()
+
+
+def bonded_energy(pos, box, topology) -> jax.Array:
+    t = topology
+    return (bond_energy(pos, box, t.bonds, t.bond_params, t.bond_mask)
+            + angle_energy(pos, box, t.angles, t.angle_params, t.angle_mask)
+            + dihedral_energy(pos, box, t.dihedrals, t.dihedral_params,
+                              t.dihedral_mask))
+
+
+# ---------------------------------------------------------------------------
+# Non-bonded short range (neighbor-list driven)
+# ---------------------------------------------------------------------------
+
+def _pair_mask(system: System, nlist: NeighborList) -> jax.Array:
+    """Neighbor-list mask minus exclusions minus NN-NN pairs (NNPot contract)."""
+    idx = nlist.idx
+    n, k = idx.shape
+    safe = jnp.where(idx >= 0, idx, 0)
+    excl = system.topology.exclusions                      # (N, E)
+    excluded = (idx[:, :, None] == excl[:, None, :]).any(-1)
+    nn_nn = (system.nn_mask[:, None] * system.nn_mask[safe]) > 0.5
+    return nlist.mask * (~excluded) * (~nn_nn)
+
+
+def lj_energy(pos: jax.Array, system: System, nlist: NeighborList,
+              cutoff: float, half: bool) -> jax.Array:
+    idx = nlist.idx
+    safe = jnp.where(idx >= 0, idx, 0)
+    dr = minimum_image(pos[safe] - pos[:, None, :], system.box)
+    r2 = (dr ** 2).sum(-1)
+    mask = _pair_mask(system, nlist) * (r2 < cutoff ** 2)
+    r2 = jnp.where(mask > 0, r2, 1.0)
+
+    # Lorentz-Berthelot combining rules from per-type tables.
+    si = system.lj_sigma[system.types][:, None]
+    sj = system.lj_sigma[system.types[safe]]
+    ei = system.lj_epsilon[system.types][:, None]
+    ej = system.lj_epsilon[system.types[safe]]
+    sig = 0.5 * (si + sj)
+    eps = jnp.sqrt(ei * ej)
+
+    sr2 = sig ** 2 / r2
+    sr6 = sr2 ** 3
+    e = 4.0 * eps * (sr6 ** 2 - sr6)
+    # shift so E(r_c) = 0 (GROMACS potential-shift modifier)
+    src6 = (sig ** 2 / cutoff ** 2) ** 3
+    e = e - 4.0 * eps * (src6 ** 2 - src6)
+    total = (e * mask).sum()
+    return total if half else 0.5 * total
+
+
+def coulomb_energy(pos: jax.Array, system: System, nlist: NeighborList,
+                   cfg: ForceFieldConfig, half: bool) -> jax.Array:
+    """Cutoff Coulomb with reaction-field, or Ewald real-space when PME is on."""
+    idx = nlist.idx
+    safe = jnp.where(idx >= 0, idx, 0)
+    dr = minimum_image(pos[safe] - pos[:, None, :], system.box)
+    r2 = (dr ** 2).sum(-1)
+    rc = cfg.cutoff
+    mask = _pair_mask(system, nlist) * (r2 < rc ** 2)
+    r = jnp.sqrt(jnp.where(mask > 0, r2, 1.0))
+    qq = system.charges[:, None] * system.charges[safe]
+
+    if cfg.use_pme:
+        # real-space Ewald term; reciprocal handled in md/pme.py
+        e = COULOMB * qq * jax.scipy.special.erfc(cfg.ewald_beta * r) / r
+    else:
+        # reaction field: E = qq (1/r + k_rf r^2 - c_rf)
+        eps = cfg.eps_rf
+        k_rf = (eps - 1.0) / (2 * eps + 1.0) / rc ** 3
+        c_rf = 1.0 / rc + k_rf * rc ** 2
+        e = COULOMB * qq * (1.0 / r + k_rf * r2 - c_rf)
+    total = (e * mask).sum()
+    return total if half else 0.5 * total
+
+
+# ---------------------------------------------------------------------------
+# Total classical energy / forces
+# ---------------------------------------------------------------------------
+
+def classical_energy(pos: jax.Array, system: System, nlist: NeighborList,
+                     cfg: ForceFieldConfig, half: bool = True) -> jax.Array:
+    e = bonded_energy(pos, system.box, system.topology)
+    e += lj_energy(pos, system, nlist, cfg.cutoff, half)
+    e += coulomb_energy(pos, system, nlist, cfg, half)
+    if cfg.use_pme:
+        from .pme import pme_reciprocal_energy
+        e += pme_reciprocal_energy(pos, system.charges, system.box,
+                                   cfg.pme_grid, cfg.pme_order, cfg.ewald_beta)
+        # Ewald self-energy
+        e -= COULOMB * cfg.ewald_beta / jnp.sqrt(jnp.pi) * (system.charges ** 2).sum()
+    return e
+
+
+def classical_forces(pos, system, nlist, cfg, half: bool = True):
+    e, g = jax.value_and_grad(classical_energy)(pos, system, nlist, cfg, half)
+    return e, -g

@@ -1,0 +1,84 @@
+"""Time integrators: leap-frog (GROMACS default), velocity Verlet, Langevin.
+
+State layout matches the engine: positions wrapped into the box each step,
+velocities at the leap-frog half step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .system import KB
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class MDState:
+    positions: jax.Array   # (N, 3)
+    velocities: jax.Array  # (N, 3)
+    forces: jax.Array      # (N, 3)
+    step: jax.Array        # () int32
+    rng: jax.Array         # PRNG key (Langevin)
+
+
+def wrap(pos: jax.Array, box: jax.Array) -> jax.Array:
+    return jnp.mod(pos, box)
+
+
+def leapfrog_step(state: MDState, forces_new: jax.Array, masses: jax.Array,
+                  box: jax.Array, dt: float) -> MDState:
+    """v(t+dt/2) = v(t-dt/2) + F(t)/m dt ;  x(t+dt) = x(t) + v(t+dt/2) dt."""
+    inv_m = 1.0 / masses[:, None]
+    v = state.velocities + forces_new * inv_m * dt
+    x = wrap(state.positions + v * dt, box)
+    return dataclasses.replace(state, positions=x, velocities=v,
+                               forces=forces_new, step=state.step + 1)
+
+
+def velocity_verlet_step(state: MDState, force_fn: Callable, masses, box,
+                         dt: float) -> MDState:
+    inv_m = 1.0 / masses[:, None]
+    v_half = state.velocities + 0.5 * dt * state.forces * inv_m
+    x = wrap(state.positions + dt * v_half, box)
+    f_new = force_fn(x)
+    v = v_half + 0.5 * dt * f_new * inv_m
+    return dataclasses.replace(state, positions=x, velocities=v, forces=f_new,
+                               step=state.step + 1)
+
+
+def langevin_baoab_step(state: MDState, force_fn: Callable, masses, box,
+                        dt: float, temperature: float,
+                        friction: float) -> MDState:
+    """BAOAB splitting (Leimkuhler-Matthews) — used for NVT equilibration."""
+    inv_m = 1.0 / masses[:, None]
+    rng, sub = jax.random.split(state.rng)
+    v = state.velocities + 0.5 * dt * state.forces * inv_m           # B
+    x = state.positions + 0.5 * dt * v                               # A
+    c1 = jnp.exp(-friction * dt)
+    c2 = jnp.sqrt((1 - c1 ** 2) * KB * temperature) / jnp.sqrt(masses)[:, None]
+    v = c1 * v + c2 * jax.random.normal(sub, v.shape, v.dtype)       # O
+    x = wrap(x + 0.5 * dt * v, box)                                  # A
+    f_new = force_fn(x)
+    v = v + 0.5 * dt * f_new * inv_m                                 # B
+    return dataclasses.replace(state, positions=x, velocities=v, forces=f_new,
+                               step=state.step + 1, rng=rng)
+
+
+def berendsen_rescale(velocities, masses, target_t: float, dt: float,
+                      tau: float) -> jax.Array:
+    ke = 0.5 * (masses[:, None] * velocities ** 2).sum()
+    ndof = velocities.size - 3
+    t_now = 2 * ke / (ndof * KB)
+    lam = jnp.sqrt(jnp.maximum(1 + dt / tau * (target_t / jnp.maximum(t_now, 1e-9) - 1), 1e-3))
+    return velocities * lam
+
+
+def init_velocities(rng, masses, temperature: float) -> jax.Array:
+    """Maxwell-Boltzmann draw with COM motion removed."""
+    sigma = jnp.sqrt(KB * temperature / masses)[:, None]
+    v = sigma * jax.random.normal(rng, (masses.shape[0], 3))
+    p = (masses[:, None] * v).sum(0) / masses.sum()
+    return v - p[None, :]

@@ -1,0 +1,192 @@
+"""Optimizers from scratch (no optax): Adam/AdamW, SGD-momentum, plus an
+8-bit block-quantized Adam for optimizer-state compression.
+
+All optimizers are (init, update) pairs over arbitrary pytrees, jit-safe.
+The quantized variant stores m/v as int8 blocks with per-block scales —
+the distributed-optimization trick that makes 100B+-param training fit the
+per-device HBM budget (see EXPERIMENTS.md memory analysis).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., tuple[Any, Any]]  # (grads, state, params) -> (updates, state)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+# ---------------------------------------------------------------------------
+# Adam / AdamW
+# ---------------------------------------------------------------------------
+
+def adam(lr: float | Callable[[jax.Array], jax.Array], b1: float = 0.9,
+         b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        lr_t = lr_fn(count)
+        bc1 = 1 - b1 ** count.astype(jnp.float32)
+        bc2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mhat = m / bc1
+            vhat = v / bc2
+            u = -lr_t * (mhat / (jnp.sqrt(vhat) + eps)
+                         + weight_decay * p.astype(jnp.float32))
+            return u, m, v
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        updates = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"m": m, "v": v, "count": count}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, weight_decay: float = 0.1, **kw) -> Optimizer:
+    return adam(lr, weight_decay=weight_decay, **kw)
+
+
+def sgd(lr: float | Callable, momentum: float = 0.9) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {"mu": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        mu = jax.tree.map(lambda g, m: momentum * m + g.astype(jnp.float32),
+                          grads, state["mu"])
+        updates = jax.tree.map(lambda m: -lr_fn(count) * m, mu)
+        return updates, {"mu": mu, "count": count}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# 8-bit block-quantized Adam (optimizer-state compression)
+# ---------------------------------------------------------------------------
+
+_BLOCK = 256
+
+
+def _quantize(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric int8 block quantization of a flat fp32 array."""
+    n = x.size
+    pad = (-n) % _BLOCK
+    xf = jnp.pad(x.reshape(-1), (0, pad)).reshape(-1, _BLOCK)
+    scale = jnp.max(jnp.abs(xf), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dequantize(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    x = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return x[:n].reshape(shape)
+
+
+def adam8bit(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+             weight_decay: float = 0.0, min_size: int = 4096) -> Optimizer:
+    """Compressed-state Adam for tensors >= min_size elements:
+
+      * first moment m: blockwise-int8 (1.004 B/elem) — linear quantization
+        is safe for m (update is ~m/sqrt(v); small-m errors are benign);
+      * second moment v: bf16 (2 B/elem) — v spans many orders of magnitude
+        within a block, and linear int8 rounds small entries to ZERO, which
+        explodes m/sqrt(v) (observed: divergence on a 4096-dim quadratic).
+        bf16 keeps the exponent, exactly what v needs.
+
+    State = ~3 B/param instead of 8 — the compression that brings
+    deepseek-v3-scale optimizer state under the 16 GB/chip budget
+    (EXPERIMENTS.md memory notes).
+    """
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def _is_slot(x):
+        return isinstance(x, dict) and ("q" in x or "m" in x or "v16" in x)
+
+    def init(params):
+        def m_slot(p):
+            if p.size >= min_size:
+                q, s = _quantize(jnp.zeros(p.shape, jnp.float32))
+                return {"q": q, "s": s}
+            return {"m": jnp.zeros_like(p, jnp.float32)}
+
+        def v_slot(p):
+            if p.size >= min_size:
+                return {"v16": jnp.zeros(p.shape, jnp.bfloat16)}
+            return {"m": jnp.zeros_like(p, jnp.float32)}
+
+        return {"m": jax.tree.map(m_slot, params),
+                "v": jax.tree.map(v_slot, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        lr_t = lr_fn(count)
+        bc1 = 1 - b1 ** count.astype(jnp.float32)
+        bc2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def upd(g, ms, vs, p):
+            # slot kind is static (structure-encoded), so python `if` is safe
+            g = g.astype(jnp.float32)
+            m = _dequantize(ms["q"], ms["s"], g.shape) if "q" in ms else ms["m"]
+            v = vs["v16"].astype(jnp.float32) if "v16" in vs else vs["m"]
+            m = b1 * m + (1 - b1) * g
+            v = jnp.maximum(b2 * v + (1 - b2) * g * g, 0.0)
+            u = -lr_t * ((m / bc1) / (jnp.sqrt(v / bc2) + eps)
+                         + weight_decay * p.astype(jnp.float32))
+            new_m = ({"q": (qs := _quantize(m))[0], "s": qs[1]}
+                     if "q" in ms else {"m": m})
+            new_v = ({"v16": v.astype(jnp.bfloat16)} if "v16" in vs
+                     else {"m": v})
+            return u, new_m, new_v
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params,
+                           is_leaf=_is_slot)
+        is3 = lambda x: isinstance(x, tuple) and len(x) == 3
+        pick = lambda i: jax.tree.map(lambda o: o[i], out, is_leaf=is3)
+        return pick(0), {"m": pick(1), "v": pick(2), "count": count}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Gradient utilities
+# ---------------------------------------------------------------------------
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(x.astype(jnp.float32) ** 2)
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm

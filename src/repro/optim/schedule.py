@@ -1,0 +1,38 @@
+"""Learning-rate schedules and DeePMD loss-prefactor schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def exponential_decay(lr0: float, decay_steps: int, decay_rate: float,
+                      lr_min: float = 0.0):
+    def fn(step):
+        s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        return jnp.maximum(lr0 * decay_rate ** (s / decay_steps), lr_min)
+    return fn
+
+
+def cosine_with_warmup(lr0: float, warmup: int, total: int,
+                       lr_min_ratio: float = 0.1):
+    def fn(step):
+        s = step * 1.0
+        warm = lr0 * s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = lr_min_ratio * lr0 + (1 - lr_min_ratio) * lr0 * 0.5 * (
+            1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+    return fn
+
+
+def deepmd_prefactors(start_pref_e: float = 0.02, limit_pref_e: float = 1.0,
+                      start_pref_f: float = 1000.0, limit_pref_f: float = 1.0):
+    """DeePMD loss prefactor schedule: interpolates with the lr decay ratio.
+
+    pref(t) = limit + (start - limit) * lr(t)/lr(0); forces dominate early,
+    energies late — exactly DeePMD-kit's default training behavior.
+    """
+    def fn(lr_ratio):
+        pe = limit_pref_e + (start_pref_e - limit_pref_e) * lr_ratio
+        pf = limit_pref_f + (start_pref_f - limit_pref_f) * lr_ratio
+        return pe, pf
+    return fn

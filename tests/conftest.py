@@ -1,0 +1,24 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests must see 1 device;
+multi-device tests spawn subprocesses with their own flags."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def run_in_subprocess(code: str, n_devices: int = 8, timeout: int = 560) -> str:
+    """Run python code with a forced host device count; returns stdout."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, env=env, timeout=timeout)
+    assert proc.returncode == 0, f"subprocess failed:\n{proc.stderr[-4000:]}"
+    return proc.stdout

@@ -1,0 +1,36 @@
+"""Deterministic loader: resume-exactness + sharding disjointness."""
+import numpy as np
+import pytest
+
+from repro.data.loader import DeterministicLoader, LoaderConfig
+
+
+@pytest.fixture()
+def arrays():
+    return {"x": np.arange(64), "y": np.arange(64) * 2}
+
+
+def test_resume_is_exact(arrays):
+    l1 = DeterministicLoader(arrays, LoaderConfig(batch_size=4, seed=7))
+    seq_a = [l1.batch_at(s)["x"].tolist() for s in range(12)]
+    # "restart" at step 5: batches must be identical from there
+    l2 = DeterministicLoader(arrays, LoaderConfig(batch_size=4, seed=7))
+    seq_b = [l2.batch_at(s)["x"].tolist() for s in range(5, 12)]
+    assert seq_a[5:] == seq_b
+
+
+def test_epoch_covers_all_samples(arrays):
+    l = DeterministicLoader(arrays, LoaderConfig(batch_size=4, seed=0))
+    seen = set()
+    for s in range(l.steps_per_epoch):
+        seen.update(l.batch_at(s)["x"].tolist())
+    assert seen == set(range(64))
+
+
+def test_shards_are_disjoint(arrays):
+    shards = [DeterministicLoader(arrays, LoaderConfig(batch_size=4, seed=3),
+                                  shard_index=i, shard_count=2)
+              for i in range(2)]
+    a = set(shards[0].batch_at(0)["x"].tolist())
+    b = set(shards[1].batch_at(0)["x"].tolist())
+    assert not (a & b)

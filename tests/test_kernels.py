@@ -1,0 +1,91 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret=True."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.ops import attention_op, env_mat_op, nbr_attention_op
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("n,k", [(8, 32), (37, 50), (64, 128), (1, 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_env_mat_kernel(n, k, dtype):
+    dx, dy, dz = (jnp.asarray(RNG.normal(0, 0.3, (n, k)), dtype)
+                  for _ in range(3))
+    mask = jnp.asarray(RNG.random((n, k)) > 0.3, dtype)
+    got = env_mat_op(dx, dy, dz, mask, 0.2, 0.6, use_pallas=True,
+                     interpret=True)
+    want = ref.env_mat_ref(dx, dy, dz, mask, 0.2, 0.6)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=3e-5, atol=3e-6)
+
+
+@pytest.mark.parametrize("n,k,m,h", [(13, 24, 64, 96), (8, 16, 32, 32),
+                                     (5, 48, 128, 256)])
+def test_nbr_attention_kernel(n, k, m, h):
+    g = jnp.asarray(RNG.normal(0, 1, (n, k, m)), jnp.float32)
+    rx, ry, rz, sw = (jnp.asarray(RNG.normal(0, 1, (n, k)), jnp.float32)
+                      for _ in range(4))
+    mask = jnp.asarray(RNG.random((n, k)) > 0.2, jnp.float32)
+    wq, wk, wv = (jnp.asarray(RNG.normal(0, 0.1, (m, h)), jnp.float32)
+                  for _ in range(3))
+    wo = jnp.asarray(RNG.normal(0, 0.1, (h, m)), jnp.float32)
+    gamma, beta = jnp.ones(m), jnp.zeros(m)
+    got = nbr_attention_op(g, rx, ry, rz, sw, mask, wq, wk, wv, wo, gamma,
+                           beta, use_pallas=True, interpret=True)
+    want = ref.nbr_attention_layer_ref(g, rx, ry, rz, sw, mask, wq, wk, wv,
+                                       wo, gamma, beta)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize(
+    "b,hq,hkv,sq,sk,d,causal,window,cap,off",
+    [(2, 4, 2, 128, 128, 64, True, 0, 0.0, 0),
+     (1, 8, 2, 200, 200, 64, True, 128, 30.0, 0),
+     (1, 4, 4, 1, 256, 64, False, 0, 0.0, 255),
+     (2, 2, 1, 96, 160, 32, True, 0, 0.0, 64),
+     (1, 2, 2, 64, 64, 128, True, 32, 50.0, 0)])
+def test_flash_attention_kernel(b, hq, hkv, sq, sk, d, causal, window, cap,
+                                off):
+    q = jnp.asarray(RNG.normal(0, 1, (b, hq, sq, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(0, 1, (b, hkv, sk, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(0, 1, (b, hkv, sk, d)), jnp.float32)
+    got = attention_op(q, k, v, causal, window, cap, off, use_pallas=True,
+                       interpret=True)
+    want = ref.attention_ref(q, k, v, causal, window, cap, off)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_flash_attention_bf16():
+    q = jnp.asarray(RNG.normal(0, 1, (1, 4, 128, 64)), jnp.bfloat16)
+    k = jnp.asarray(RNG.normal(0, 1, (1, 2, 128, 64)), jnp.bfloat16)
+    v = jnp.asarray(RNG.normal(0, 1, (1, 2, 128, 64)), jnp.bfloat16)
+    got = attention_op(q, k, v, True, 0, 0.0, 0, use_pallas=True,
+                       interpret=True)
+    want = ref.attention_ref(q, k, v, True, 0, 0.0, 0)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 40), k=st.integers(4, 64), seed=st.integers(0, 99))
+def test_env_mat_property(n, k, seed):
+    """Property: outputs vanish exactly where mask is 0 or r >= rcut."""
+    r = np.random.default_rng(seed)
+    dx, dy, dz = (jnp.asarray(r.normal(0, 0.4, (n, k)), jnp.float32)
+                  for _ in range(3))
+    mask = jnp.asarray(r.random((n, k)) > 0.5, jnp.float32)
+    s, sx, sy, sz = env_mat_op(dx, dy, dz, mask, 0.2, 0.6, use_pallas=True,
+                               interpret=True)
+    dist = np.sqrt(np.asarray(dx) ** 2 + np.asarray(dy) ** 2
+                   + np.asarray(dz) ** 2)
+    dead = (np.asarray(mask) == 0) | (dist >= 0.6)
+    assert np.abs(np.asarray(s)[dead]).max(initial=0.0) == 0.0
