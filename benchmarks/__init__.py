@@ -1,0 +1,11 @@
+"""Benchmark package: make ``python -m benchmarks.<name>`` work from a
+repo checkout without an editable install (mirrors examples/)."""
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+if os.path.isdir(_SRC) and _SRC not in sys.path:
+    try:
+        import repro  # noqa: F401
+    except ImportError:
+        sys.path.insert(0, _SRC)

@@ -1,0 +1,125 @@
+"""Subdomain-assembly scaling sweep: dense O(C^2) oracle vs cell list.
+
+Measures, per atom count at fixed density, the per-step cost of one rank's
+subdomain assembly (ghost/local selection + neighbor-list construction) for
+both ``nbr_method`` paths, plus the peak candidate-buffer element counts
+(the memory-side quadratic term).  Writes ``BENCH_dd_scaling.json`` with
+fitted log-log slopes: the cell path must grow sub-quadratically (slope of
+the dense candidate buffer is exactly 2).
+
+Usage:
+  python -m benchmarks.dd_scaling              # full sweep
+  python -m benchmarks.dd_scaling --smoke      # one tiny point (CI)
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from .common import save_json, time_fn
+
+DENSITY = 3.7          # atoms / nm^3 (water-ish NN-group density)
+RCUT = 0.6
+N_RANKS = 8
+
+
+def _assembly_fn(method: str, cfg, coords, box, grid):
+    import jax
+    import jax.numpy as jnp
+    from repro.core.ddinfer import (_subdomain_nbr_list,
+                                    _subdomain_nbr_list_cells)
+    from repro.core.domain import (bin_atoms, select_ghosts,
+                                   select_ghosts_cells, select_local,
+                                   select_local_cells)
+
+    rank = jnp.asarray(0)
+
+    @jax.jit
+    def assemble(c):
+        if method == "cells":
+            table = bin_atoms(c, box, cfg.cell_dims, cfg.cell_capacity)
+            l_idx, l_mask, _, _ = select_local_cells(
+                c, grid, rank, cfg.local_capacity, table, cfg.local_region, box)
+            g_idx, g_shift, g_mask, _, _ = select_ghosts_cells(
+                c, box, grid, rank, cfg.halo, cfg.ghost_capacity, table,
+                cfg.ghost_region)
+        else:
+            l_idx, l_mask, _ = select_local(c, grid, rank, cfg.local_capacity)
+            g_idx, g_shift, g_mask, _ = select_ghosts(
+                c, box, grid, rank, cfg.halo, cfg.ghost_capacity)
+        buf = jnp.concatenate([c[l_idx], c[g_idx] + g_shift])
+        bm = jnp.concatenate([l_mask, g_mask]).astype(c.dtype)
+        park = jnp.asarray(box).max() * 10.0 * (
+            1.0 + jnp.arange(buf.shape[0], dtype=c.dtype))[:, None]
+        buf = jnp.where(bm[:, None] > 0, buf, park + jnp.asarray(box) * 3.0)
+        if method == "cells":
+            lo, _ = grid.bounds(rank)
+            idx, mask, ovf = _subdomain_nbr_list_cells(
+                buf, bm, RCUT, cfg.nbr_capacity, lo - cfg.halo,
+                cfg.subcell_dims, cfg.subcell_capacity)
+        else:
+            idx, mask, ovf = _subdomain_nbr_list(buf, bm, RCUT,
+                                                 cfg.nbr_capacity)
+        return idx.sum() + mask.sum() + ovf
+
+    return lambda: assemble(coords).block_until_ready()
+
+
+def _peak_buffers(method: str, cfg, n: int) -> int:
+    """Peak candidate-buffer element count of the assembly (the scaling
+    driver): dense materializes C^2 pair distances + a 27N ghost scan;
+    cells gathers 27 * cell_capacity candidates per buffer atom + a
+    region * cell_capacity ghost scan."""
+    c = cfg.local_capacity + cfg.ghost_capacity
+    if method == "cells":
+        ghost_scan = int(np.prod(cfg.ghost_region)) * cfg.cell_capacity
+        return max(c * 27 * cfg.subcell_capacity, ghost_scan)
+    return max(c * c, 27 * n)
+
+
+def run(smoke: bool = False):
+    import jax
+    import jax.numpy as jnp
+    from repro.core.ddinfer import suggest_config
+    from repro.core.domain import uniform_grid
+
+    sweep = [256] if smoke else [128, 256, 512, 1024, 2048, 4096]
+    rng = np.random.default_rng(0)
+    rows, results = [], []
+    for n in sweep:
+        boxl = float((n / DENSITY) ** (1.0 / 3.0))
+        box = np.array([boxl] * 3, np.float32)
+        coords = jnp.asarray(rng.uniform(0, boxl, (n, 3)), jnp.float32)
+        point = {"n_atoms": n, "box": boxl}
+        for method in ["dense", "cells"]:
+            cfg = suggest_config(n, box, N_RANKS, RCUT, nbr_capacity=64,
+                                 slack=2.0, nbr_method=method, coords=coords)
+            grid = uniform_grid(box, cfg.grid_dims)
+            us = time_fn(_assembly_fn(method, cfg, coords, box, grid),
+                         warmup=2, iters=5)
+            point[method] = {
+                "assembly_us": us,
+                "peak_candidate_elems": _peak_buffers(method, cfg, n),
+                "buffer_atoms": cfg.local_capacity + cfg.ghost_capacity,
+            }
+            rows.append((f"dd_scaling_{method}_n{n}", us,
+                         f"peak={point[method]['peak_candidate_elems']}"))
+        results.append(point)
+
+    payload = {"density": DENSITY, "rcut": RCUT, "n_ranks": N_RANKS,
+               "points": results}
+    if len(results) >= 3:
+        ln = np.log([p["n_atoms"] for p in results])
+        for method in ["dense", "cells"]:
+            t = np.log([p[method]["assembly_us"] for p in results])
+            b = np.log([p[method]["peak_candidate_elems"] for p in results])
+            payload[f"{method}_time_slope"] = float(np.polyfit(ln, t, 1)[0])
+            payload[f"{method}_buffer_slope"] = float(np.polyfit(ln, b, 1)[0])
+    save_json("BENCH_dd_scaling", payload)
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run(smoke="--smoke" in sys.argv[1:]):
+        print(f"{name},{us:.1f},{derived}")

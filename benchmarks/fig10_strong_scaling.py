@@ -10,7 +10,6 @@ paper's identified bottleneck.
 """
 from __future__ import annotations
 
-import time
 
 import jax
 import jax.numpy as jnp

@@ -13,7 +13,6 @@ from .common import save_json
 
 
 def run():
-    import jax
     from repro.data import make_dataset
     from repro.dp import (DPModel, TrainConfig, fit_env_stats,
                           paper_dpa1_config, train)

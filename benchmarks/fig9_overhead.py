@@ -7,10 +7,8 @@ dependent and recorded as-is).
 """
 from __future__ import annotations
 
-import time
 
 import jax
-import numpy as np
 
 from .common import save_json, time_fn
 
@@ -20,7 +18,6 @@ def _live_bytes() -> int:
 
 
 def run():
-    import jax.numpy as jnp
     from repro.core import DeepmdForceProvider
     from repro.dp import DPModel, paper_dpa1_config
     from repro.md import (EngineConfig, MDEngine, build_solvated_protein,

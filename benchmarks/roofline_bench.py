@@ -6,7 +6,6 @@ import glob
 import json
 import os
 
-from .common import save_json
 
 DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                           "dryrun")

@@ -19,6 +19,8 @@ ap.add_argument("--steps", type=int, default=30)
 ap.add_argument("--residues", type=int, default=16)
 ap.add_argument("--force-mode", default="owner_full",
                 choices=["owner_full", "ghost_reduce"])
+ap.add_argument("--nbr-method", default="cells", choices=["cells", "dense"],
+                help="subdomain assembly: cell list (linear) or dense oracle")
 ap.add_argument("--balanced", action="store_true")
 ap.add_argument("--ckpt-dir", default=None)
 args = ap.parse_args()
@@ -51,9 +53,12 @@ def main():
     mesh = make_dd_mesh(args.ranks)
     dd = suggest_config(len(nn_idx), np.asarray(system.box), args.ranks,
                         0.6, nbr_capacity=48, slack=2.5,
-                        balanced=args.balanced, force_mode=args.force_mode)
+                        balanced=args.balanced, force_mode=args.force_mode,
+                        nbr_method=args.nbr_method,
+                        coords=np.asarray(positions)[np.asarray(nn_idx)])
     print(f"virtual DD grid {dd.grid_dims}, halo {dd.halo:.2f} nm, "
-          f"capacities local={dd.local_capacity} ghost={dd.ghost_capacity}")
+          f"capacities local={dd.local_capacity} ghost={dd.ghost_capacity}, "
+          f"assembly={dd.nbr_method}")
 
     provider = DeepmdForceProvider(model, params, nn_idx, system.types,
                                    system.box, system.n_atoms,

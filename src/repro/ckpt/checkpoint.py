@@ -85,10 +85,17 @@ def load_pytree(path: str, like: Any = None) -> Any:
     return jax.tree_util.tree_unflatten(treedef, new)
 
 
+def _complete_step_dirs(root: str) -> list[str]:
+    """Finished checkpoints only — a crash mid-write leaves ``step_N.tmp``
+    behind, which must never be restored from (or counted by GC)."""
+    return [d for d in os.listdir(root)
+            if d.startswith("step_") and not d.endswith(".tmp")]
+
+
 def latest_step_dir(root: str) -> Optional[str]:
     if not os.path.isdir(root):
         return None
-    steps = [d for d in os.listdir(root) if d.startswith("step_")]
+    steps = _complete_step_dirs(root)
     if not steps:
         return None
     best = max(steps, key=lambda d: int(d.split("_")[1]))
@@ -115,7 +122,10 @@ class AsyncCheckpointer:
             save_pytree(path, host_tree, step)
             self._gc()
 
-        self._thread = threading.Thread(target=work, daemon=True)
+        # non-daemon: an interpreter exit (including SystemExit from failure
+        # injection) must let a bounded in-flight write finish its atomic
+        # rename; only a hard kill abandons it, which the .tmp protocol covers
+        self._thread = threading.Thread(target=work, daemon=False)
         self._thread.start()
 
     def wait(self) -> None:
@@ -133,6 +143,11 @@ class AsyncCheckpointer:
         return load_pytree(path, like), step
 
     def _gc(self) -> None:
-        steps = sorted(d for d in os.listdir(self.root) if d.startswith("step_"))
+        steps = sorted(_complete_step_dirs(self.root))
         for d in steps[: -self.keep]:
             shutil.rmtree(os.path.join(self.root, d), ignore_errors=True)
+        # sweep tmp orphans from crashed writes (never the in-flight one:
+        # _gc runs on the writer thread after its own rename completed)
+        for d in os.listdir(self.root):
+            if d.startswith("step_") and d.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.root, d), ignore_errors=True)

@@ -1,6 +1,7 @@
 """The paper's contribution: virtual DD + distributed DP inference."""
 from .domain import (VirtualGrid, uniform_grid, balanced_planes, factor_grid,  # noqa: F401
-                     select_local, select_ghosts, partition_costs)
+                     select_local, select_ghosts, partition_costs,
+                     bin_atoms, select_local_cells, select_ghosts_cells)
 from .ddinfer import (DDConfig, suggest_config, make_distributed_force_fn,  # noqa: F401
                       single_domain_forces)
 from .nnpot import DeepmdForceProvider, UnitConversion  # noqa: F401

@@ -23,11 +23,12 @@ load-imbalance bottleneck the paper identifies as dominant (Sec. VI-B).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from ..md import cells as cellmod
 
 
 def factor_grid(p: int, box) -> tuple[int, int, int]:
@@ -118,7 +119,7 @@ def balanced_planes(coords: jax.Array, box, dims: tuple[int, int, int],
         planes = jnp.concatenate([jnp.zeros(1), qs, L[None]])
         # enforce monotone, minimum slab width of 25% of uniform
         min_w = 0.25 * L / g
-        planes = jnp.maximum.accumulate(planes)
+        planes = jax.lax.cummax(planes)
         planes = jnp.maximum(planes, jnp.arange(g + 1) * min_w)
         planes = jnp.minimum(planes, L - (g - jnp.arange(g + 1)) * min_w)
         return planes
@@ -145,10 +146,15 @@ def select_local(coords: jax.Array, grid: VirtualGrid, rank: jax.Array,
     n = coords.shape[0]
     member = grid.rank_of(coords) == rank
     score = jnp.where(member, -jnp.arange(n, dtype=jnp.float32), -jnp.inf)
-    _, idx = jax.lax.top_k(score, capacity)
+    k = min(capacity, n)
+    _, idx = jax.lax.top_k(score, k)
     mask = jnp.take(member, idx)
+    idx = jnp.where(mask, idx, 0).astype(jnp.int32)
+    if k < capacity:
+        idx = jnp.concatenate([idx, jnp.zeros(capacity - k, jnp.int32)])
+        mask = jnp.concatenate([mask, jnp.zeros(capacity - k, bool)])
     count = member.sum()
-    return jnp.where(mask, idx, 0).astype(jnp.int32), mask, count
+    return idx, mask, count
 
 
 def select_ghosts(coords: jax.Array, box, grid: VirtualGrid, rank: jax.Array,
@@ -172,13 +178,156 @@ def select_ghosts(coords: jax.Array, box, grid: VirtualGrid, rank: jax.Array,
 
     flat = ghost.reshape(-1)                                         # (27N,)
     score = jnp.where(flat, -jnp.arange(27 * n, dtype=jnp.float32), -jnp.inf)
-    _, sel = jax.lax.top_k(score, capacity)
+    k = min(capacity, 27 * n)
+    _, sel = jax.lax.top_k(score, k)
     mask = jnp.take(flat, sel)
     shift_idx = sel // n
     atom_idx = sel % n
     shift_vec = shifts[shift_idx] * mask[:, None]
-    return (jnp.where(mask, atom_idx, 0).astype(jnp.int32), shift_vec,
-            mask, ghost.sum())
+    idx = jnp.where(mask, atom_idx, 0).astype(jnp.int32)
+    if k < capacity:
+        idx = jnp.concatenate([idx, jnp.zeros(capacity - k, jnp.int32)])
+        mask = jnp.concatenate([mask, jnp.zeros(capacity - k, bool)])
+        shift_vec = jnp.concatenate(
+            [shift_vec, jnp.zeros((capacity - k, 3), coords.dtype)])
+    return idx, shift_vec, mask, ghost.sum()
+
+
+# ---------------------------------------------------------------------------
+# Cell-based selection: enumerate only the O(halo surface) cells of the
+# expanded subdomain instead of scanning all 27*N (atom, image) pairs.
+# ---------------------------------------------------------------------------
+
+def bin_atoms(coords: jax.Array, box, dims: tuple[int, int, int],
+              capacity: int) -> cellmod.CellTable:
+    """Bin the replicated coordinate buffer into a global periodic cell grid.
+
+    Identical on every rank (runs on the post-all-gather buffer), so the
+    table can be built once per step and shared by local+ghost selection.
+    """
+    box = jnp.asarray(box)
+    cw = box / jnp.asarray(dims, coords.dtype)
+    frac = jnp.clip(jnp.floor(coords / cw).astype(jnp.int32),
+                    0, jnp.asarray(dims, jnp.int32) - 1)
+    return cellmod.build_cell_table(cellmod.cell_ids_from_coords(frac, dims),
+                                    dims, capacity)
+
+
+def _region_cells(lo, hi, box, dims: tuple[int, int, int],
+                  region: tuple[int, int, int]):
+    """Enumerate the static-capacity block of cells covering [lo, hi).
+
+    Returns (ids (R,), shift (R, 3) int, valid (R,), overflow ()) where R =
+    prod(region).  Out-of-box cells wrap periodically; ``shift`` is the
+    integer image shift recovered from the floor division, so downstream
+    code gets explicit (atom, image) ghost candidates.  ``overflow`` is set
+    when the true extent exceeds the static ``region`` capacity.
+    """
+    box = jnp.asarray(box)
+    dims_arr = jnp.asarray(dims, jnp.int32)
+    cw = box / dims_arr.astype(box.dtype)
+    c0 = jnp.floor(lo / cw).astype(jnp.int32)              # (3,) first cell
+    c1 = jnp.floor(hi / cw).astype(jnp.int32)              # (3,) last cell
+    overflow = ((c1 - c0 + 1) > jnp.asarray(region, jnp.int32)).any()
+
+    ax = [c0[a] + jnp.arange(region[a], dtype=jnp.int32) for a in range(3)]
+    valid_ax = [ax[a] <= c1[a] for a in range(3)]
+    cc = jnp.stack(jnp.meshgrid(*ax, indexing="ij"), axis=-1).reshape(-1, 3)
+    valid = (valid_ax[0][:, None, None] & valid_ax[1][None, :, None]
+             & valid_ax[2][None, None, :]).reshape(-1)
+    shift = jnp.floor_divide(cc, dims_arr)
+    wrapped = cc - shift * dims_arr
+    ids = cellmod.cell_ids_from_coords(wrapped, dims)
+    # distinct unwrapped coords can alias the same (wrapped, shift) pair only
+    # when the region spans > 2 box lengths, which validate() forbids; but a
+    # *clipped* shift plus wrap can alias on tiny grids — dedupe to be safe.
+    key = ids * 27 + ((shift[:, 0] + 1) * 9 + (shift[:, 1] + 1) * 3
+                      + (shift[:, 2] + 1))
+    valid &= cellmod.dedupe_mask(jnp.where(valid, key, -1 - jnp.arange(key.shape[0])))
+    n_cells = int(np.prod(dims))
+    ids = jnp.where(valid, ids, n_cells)                   # spill -> empty row
+    return ids, shift, valid, overflow
+
+
+def select_local_cells(coords: jax.Array, grid: VirtualGrid, rank: jax.Array,
+                       capacity: int, table: cellmod.CellTable,
+                       region: tuple[int, int, int], box):
+    """Cell-based :func:`select_local`: candidates come from the cells
+    overlapping the subdomain instead of the full atom range.  Same returns,
+    same ordering (ascending atom index), plus a region-overflow flag."""
+    n = coords.shape[0]
+    lo, hi = grid.bounds(rank)
+    ids, _, _, region_overflow = _region_cells(lo, hi, box, table.dims, region)
+    # a subdomain spanning a full axis wraps: the same cell shows up under
+    # two image shifts.  Shifts are irrelevant to (unshifted) residence, so
+    # dedupe purely by cell id to not select an atom twice.
+    n_cells = int(np.prod(table.dims))
+    ids = jnp.where(cellmod.dedupe_mask(ids), ids, n_cells)
+    cand = table.table[ids].reshape(-1)                    # (R * cap,)
+    member = grid.rank_of(coords) == rank
+    is_member = jnp.where(cand >= 0, member[jnp.clip(cand, 0)], False)
+    score = jnp.where(is_member, -cand.astype(jnp.float32), -jnp.inf)
+    k = min(capacity, cand.shape[0])
+    _, sel = jax.lax.top_k(score, k)
+    mask = jnp.take(is_member, sel)
+    idx = jnp.where(mask, cand[sel], 0).astype(jnp.int32)
+    if k < capacity:
+        idx = jnp.concatenate([idx, jnp.zeros(capacity - k, jnp.int32)])
+        mask = jnp.concatenate([mask, jnp.zeros(capacity - k, bool)])
+    count = member.sum()
+    return idx, mask, count, region_overflow | table.overflow
+
+
+def select_ghosts_cells(coords: jax.Array, box, grid: VirtualGrid,
+                        rank: jax.Array, halo: float, capacity: int,
+                        table: cellmod.CellTable,
+                        region: tuple[int, int, int]):
+    """Cell-based :func:`select_ghosts`.
+
+    Gathers candidates only from the cells covering the halo-expanded
+    subdomain — O(surface * density) work instead of the dense path's
+    27*N scan — then applies the exact (shifted position inside expanded
+    bounds, not own local residence) test.  Selection is scored by the
+    dense path's flat (shift, atom) key, so for equal capacities the two
+    paths produce *identical* ghost buffers (bitwise-equal downstream
+    energies/forces).
+
+    Returns (idx (C,), shift_vec (C,3), mask (C,), count (), overflow ()).
+    """
+    n = coords.shape[0]
+    box = jnp.asarray(box)
+    lo, hi = grid.bounds(rank)
+    ids, cshift, _, region_overflow = _region_cells(
+        lo - halo, hi + halo, box, table.dims, region)
+    cap = table.capacity
+    cand = table.table[ids].reshape(-1)                    # (R * cap,)
+    shift = jnp.repeat(cshift, cap, axis=0)                # (R * cap, 3)
+    valid = cand >= 0
+    safe = jnp.clip(cand, 0)
+    pos = coords[safe] + shift.astype(coords.dtype) * box[None, :]
+    inside_exp = ((pos >= lo - halo) & (pos < hi + halo)).all(-1)
+    member = grid.rank_of(coords) == rank
+    zero_shift = (shift == 0).all(-1)
+    ghost = valid & inside_exp & ~(zero_shift & member[safe])
+
+    # dense-parity ordering: flat key shift_idx * n + atom (IMAGE_SHIFTS is
+    # lexicographic over (-1,0,1)^3, i.e. shift_idx = (sx+1)*9+(sy+1)*3+sz+1)
+    shift_idx = ((shift[:, 0] + 1) * 9 + (shift[:, 1] + 1) * 3
+                 + (shift[:, 2] + 1))
+    key = shift_idx.astype(jnp.float32) * n + safe.astype(jnp.float32)
+    score = jnp.where(ghost, -key, -jnp.inf)
+    k = min(capacity, cand.shape[0])
+    _, sel = jax.lax.top_k(score, k)
+    mask = jnp.take(ghost, sel)
+    idx = jnp.where(mask, cand[sel], 0).astype(jnp.int32)
+    shift_vec = shift[sel].astype(coords.dtype) * box[None, :] * mask[:, None]
+    if k < capacity:
+        idx = jnp.concatenate([idx, jnp.zeros(capacity - k, jnp.int32)])
+        mask = jnp.concatenate([mask, jnp.zeros(capacity - k, bool)])
+        shift_vec = jnp.concatenate(
+            [shift_vec, jnp.zeros((capacity - k, 3), coords.dtype)])
+    count = ghost.sum()
+    return idx, shift_vec, mask, count, region_overflow | table.overflow
 
 
 def partition_costs(coords: jax.Array, box, grid: VirtualGrid,

@@ -7,9 +7,8 @@ fault-tolerance contract (no duplicated or skipped batches after restart).
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional
+from typing import Iterator
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

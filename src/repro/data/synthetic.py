@@ -10,7 +10,6 @@ angular structure — the same role DFT labels play for the real model.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

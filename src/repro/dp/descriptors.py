@@ -13,7 +13,6 @@ DPA-1   : same reduction, but G^i is refined by l_a gated self-attention
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,6 @@ owning rank by the distributed layer (repro.core).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional
 
 import jax

@@ -6,12 +6,11 @@ lower on the CPU backend) and as the autodiff-friendly fallback.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
 from . import ref
+from .cell_gather import cell_filter
 from .env_mat import env_mat
 from .flash_attn import flash_attention
 from .nbr_attn import nbr_attention_layer
@@ -38,6 +37,16 @@ def env_mat_op(dx, dy, dz, mask, rcut_smth: float, rcut: float,
                             interpret=interpret)
     cut = lambda a: a[..., :k0]
     return cut(s), cut(sx), cut(sy), cut(sz)
+
+
+def cell_filter_op(dx, dy, dz, valid, rcut: float,
+                   use_pallas: bool = False, interpret: bool = not _ON_TPU):
+    """Within-cutoff flags for cell candidates; pads lanes to 128 for TPU."""
+    if not use_pallas:
+        return ref.cell_filter_ref(dx, dy, dz, valid, rcut)
+    (dxp, m0), (dyp, _), (dzp, _), (vp, _) = (
+        _pad_lanes(dx), _pad_lanes(dy), _pad_lanes(dz), _pad_lanes(valid))
+    return cell_filter(dxp, dyp, dzp, vp, rcut, interpret=interpret)[..., :m0]
 
 
 def nbr_attention_op(g, rx, ry, rz, sw, mask, wq, wk, wv, wo, gamma, beta,

@@ -21,6 +21,11 @@ def env_mat_ref(dx, dy, dz, mask, rcut_smth: float, rcut: float):
     return sw, sw * dx / r, sw * dy / r, sw * dz / r
 
 
+def cell_filter_ref(dx, dy, dz, valid, rcut: float):
+    d2 = dx * dx + dy * dy + dz * dz
+    return ((d2 < rcut * rcut) & (valid > 0)).astype(dx.dtype)
+
+
 def nbr_attention_layer_ref(g, rx, ry, rz, sw, mask, wq, wk, wv, wo,
                             gamma, beta):
     q = g @ wq

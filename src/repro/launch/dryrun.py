@@ -99,6 +99,15 @@ def _build_step_and_args(arch_cfg, shape_cfg, mesh, hp, with_mesh=True):
     return serve, (params, cache, tokens, pos), (1,)  # donate the cache
 
 
+def _cost_analysis_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()`` returns one dict on modern jax but a
+    list of per-device dicts on 0.4.x — normalize to a single dict."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
 def run_cell(arch_name: str, shape_name: str, mesh_kind: str,
              hp_overrides: dict | None = None, fit_depth: bool = True) -> dict:
     from ..configs import ARCHS, SHAPES, param_count
@@ -124,7 +133,7 @@ def run_cell(arch_name: str, shape_name: str, mesh_kind: str,
             t_compile = time.time() - t0 - t_lower
 
             ma = compiled.memory_analysis()
-            ca = compiled.cost_analysis() or {}
+            ca = _cost_analysis_dict(compiled)
             hlo = compiled.as_text()
             records = R.parse_hlo_collectives(hlo)
             colls = R.collective_summary(records)
@@ -196,8 +205,8 @@ def _depth_fit(arch, shape, mesh, hp, flops_full, bytes_full):
             # faster (rwkv/mamba chunk scans unroll to hundreds of bodies).
             args = jax.tree.map(
                 lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), args)
-            ca = (jax.jit(fn, donate_argnums=donate).lower(*args)
-                  .compile().cost_analysis() or {})
+            ca = _cost_analysis_dict(
+                jax.jit(fn, donate_argnums=donate).lower(*args).compile())
             vals[k] = (float(ca.get("flops", 0.0)) / chips,
                        float(ca.get("bytes accessed", 0.0)) / chips)
     finally:

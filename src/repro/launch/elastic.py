@@ -20,7 +20,6 @@ from __future__ import annotations
 import subprocess
 import sys
 import time
-from typing import Optional
 
 
 def supervise(cmd: list[str], max_restarts: int = 3,
@@ -40,12 +39,20 @@ def supervise(cmd: list[str], max_restarts: int = 3,
 
 
 def rebuild_dd(n_atoms: int, box, new_rank_count: int, rcut: float,
-               force_mode: str = "owner_full"):
+               force_mode: str = "owner_full", nbr_method: str = "dense",
+               **suggest_kwargs):
     """Re-derive the virtual decomposition for a changed device count —
-    elastic scaling for the distributed DP inference layer."""
+    elastic scaling for the distributed DP inference layer.
+
+    Defaults to the dense assembly oracle: a mid-run rebuild has no
+    guarantee the current configuration matches the mean-density cell
+    sizing.  Pass ``nbr_method="cells"`` together with ``coords=<current
+    positions>`` to re-derive occupancy-sized cell capacities instead.
+    """
     from ..core.ddinfer import suggest_config
     return suggest_config(n_atoms, box, new_rank_count, rcut,
-                          force_mode=force_mode)
+                          force_mode=force_mode, nbr_method=nbr_method,
+                          **suggest_kwargs)
 
 
 def main():

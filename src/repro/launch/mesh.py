@@ -6,7 +6,7 @@ devices while tests/benches must see one.
 """
 from __future__ import annotations
 
-import jax
+from .. import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -15,11 +15,9 @@ def make_production_mesh(*, multi_pod: bool = False):
     reduction)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_dd_mesh(n_ranks: int):
     """1-D mesh for the MD virtual-DD inference layer (axis "dd")."""
-    return jax.make_mesh((n_ranks,), ("dd",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return compat.make_mesh((n_ranks,), ("dd",))

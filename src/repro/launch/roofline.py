@@ -19,9 +19,7 @@ ICI.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
-from typing import Optional
 
 HW = {
     "peak_flops": 197e12,   # bf16 / chip

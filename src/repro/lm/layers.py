@@ -10,14 +10,11 @@ Pure apply-style functions over params dicts (no flax).  Conventions:
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Any, Optional
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import compat
 from ..configs.base import ArchConfig, LayerSpec
 
 
@@ -290,11 +287,11 @@ def _flash_decode_sharded(q, k, v, pos, window: int, softcap: float):
         o = o_g / jnp.maximum(l_g, 1e-30)[..., None]
         return o.reshape(q.shape[0], hq, 1, hd).astype(q.dtype)
 
-    return jax.shard_map(
+    return compat.shard_map(
         shard_fn, mesh=mesh,
         in_specs=(P(bspec, None, None, None), P(bspec, None, "model", None),
                   P(bspec, None, "model", None), P()),
-        out_specs=P(bspec, None, None, None), check_vma=False,
+        out_specs=P(bspec, None, None, None),
     )(q, k, v, pos)
 
 

@@ -8,9 +8,6 @@ layers (e.g. deepseek's first 3 dense layers) run unrolled.
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

@@ -16,11 +16,9 @@ where that costs us.
 """
 from __future__ import annotations
 
-import re
 from typing import Any, Optional
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 DP_AXES = ("pod", "data")   # multi-pod batch axes (pod absent on single pod)

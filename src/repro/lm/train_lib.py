@@ -7,8 +7,7 @@ dry-run (ShapeDtypeStructs, production configs).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

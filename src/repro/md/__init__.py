@@ -1,4 +1,5 @@
 """Classical MD substrate (the "GROMACS" layer)."""
+from . import cells  # noqa: F401
 from .system import System, Topology, build_water_box, build_solvated_protein, mark_nn_group  # noqa: F401
 from .neighbors import NeighborList, build_neighbor_list, brute_force_neighbor_list  # noqa: F401
 from .forcefield import ForceFieldConfig, classical_energy, classical_forces  # noqa: F401

@@ -1,0 +1,139 @@
+"""Shared cell-list (spatial binning) infrastructure.
+
+The binning/bucketing core used by every O(N)-ish spatial query in the
+codebase: the classical neighbor list (:mod:`repro.md.neighbors`), the
+virtual-DD ghost/local selection (:mod:`repro.core.domain`) and the
+subdomain neighbor assembly (:mod:`repro.core.ddinfer`).  Atoms are
+scattered into a static ``(n_cells + 1, capacity)`` table via one sort —
+the extra *spill row* at index ``n_cells`` absorbs invalid/masked atoms so
+callers never need data-dependent shapes.
+
+Everything is static-shape and jit/shard_map-safe: grid dimensions and
+capacities are Python ints fixed at trace time; geometric quantities
+(origins, cell edges) may be traced values.  Capacity undersizing is
+reported through an ``overflow`` flag rather than an error, mirroring the
+repo-wide "flags catch underestimates" convention.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# 27 cell offsets covering the 3x3x3 neighborhood, lexicographic over
+# (-1, 0, 1)^3 — index 13 is (0, 0, 0).  Shared with domain.IMAGE_SHIFTS.
+NEIGHBOR_OFFSETS = np.array([(i, j, k) for i in (-1, 0, 1) for j in (-1, 0, 1)
+                             for k in (-1, 0, 1)], np.int32)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CellTable:
+    """Bucketed atom indices: ``table[c]`` lists atoms in cell ``c`` (-1 pad).
+
+    Row ``n_cells`` (the last) is the spill row for atoms assigned the
+    invalid cell id; it may silently overflow and is never a candidate
+    source (its entries are set to -1).
+    """
+
+    table: jax.Array    # (n_cells + 1, capacity) int32, -1 padded
+    counts: jax.Array   # (n_cells + 1,) int32
+    overflow: jax.Array  # () bool — some *real* cell exceeded capacity
+    dims: tuple[int, int, int] = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def n_cells(self) -> int:
+        gx, gy, gz = self.dims
+        return gx * gy * gz
+
+    @property
+    def capacity(self) -> int:
+        return self.table.shape[1]
+
+
+def grid_dims(box, edge: float) -> tuple[int, int, int]:
+    """Static per-axis cell counts with each cell edge >= ``edge``."""
+    dims = np.maximum(1, np.floor(np.asarray(box, np.float64) / edge).astype(int))
+    return tuple(int(d) for d in dims)
+
+
+def suggest_cell_capacity(density: float, cell_volume: float,
+                          slack: float = 2.5, floor: int = 8) -> int:
+    """Capacity heuristic for one cell from mean density (+ overflow flags
+    downstream catching underestimates)."""
+    return int(max(floor, slack * density * cell_volume + floor))
+
+
+def cell_ids_from_coords(frac: jax.Array, dims: tuple[int, int, int]) -> jax.Array:
+    """Flatten integer cell coordinates (..., 3) to flat ids (...,)."""
+    gx, gy, gz = dims
+    return (frac[..., 0] * gy + frac[..., 1]) * gz + frac[..., 2]
+
+
+def build_cell_table(cell_ids: jax.Array, dims: tuple[int, int, int],
+                     capacity: int) -> CellTable:
+    """Scatter atoms into per-cell buckets with one argsort.
+
+    ``cell_ids`` (N,) must lie in ``[0, n_cells]``; id ``n_cells`` routes an
+    atom to the spill row (used for masked/padded atoms).  On per-cell
+    overflow the surplus atoms are dropped (and may clobber the last slot)
+    — the ``overflow`` flag marks the table invalid, same contract as the
+    capacity-padded neighbor lists.
+    """
+    n = cell_ids.shape[0]
+    gx, gy, gz = dims
+    n_cells = gx * gy * gz
+    order = jnp.argsort(cell_ids)
+    sorted_cells = cell_ids[order]
+    first = jnp.searchsorted(sorted_cells, jnp.arange(n_cells + 1))
+    slot = jnp.arange(n) - first[sorted_cells]
+    ok = slot < capacity
+    table = jnp.full((n_cells + 1, capacity), -1, jnp.int32)
+    table = table.at[sorted_cells, jnp.clip(slot, 0, capacity - 1)].set(
+        jnp.where(ok & (sorted_cells < n_cells), order, -1).astype(jnp.int32))
+    counts = jnp.zeros(n_cells + 1, jnp.int32).at[cell_ids].add(1)
+    overflow = (counts[:n_cells] > capacity).any()
+    return CellTable(table=table, counts=counts, overflow=overflow, dims=dims)
+
+
+def dedupe_mask(ids: jax.Array) -> jax.Array:
+    """Mask marking the first occurrence of each value in a small 1-D array."""
+    m = ids[:, None] == ids[None, :]
+    first = jnp.argmax(m, axis=1)  # index of first equal element
+    return first == jnp.arange(ids.shape[0])
+
+
+def neighborhood_candidates(cells: CellTable, frac: jax.Array,
+                            periodic: bool) -> jax.Array:
+    """Candidate atoms from each query's 27-cell neighborhood.
+
+    Args:
+      cells: a built table.
+      frac: (Q, 3) integer cell coordinates of the query points (in-range).
+      periodic: wrap neighbor cells around the grid (with dedupe so
+        degenerate grids — dim < 3 — do not yield an atom twice); if False
+        (open boundaries, e.g. a subdomain buffer) out-of-range cells are
+        routed to the empty spill row.
+
+    Returns (Q, 27 * capacity) int32 atom indices, -1 padded.
+    """
+    dims_arr = jnp.asarray(cells.dims, jnp.int32)
+    offsets = jnp.asarray(NEIGHBOR_OFFSETS)
+    n_cells = cells.n_cells
+
+    def one(c):
+        nb = c[None, :] + offsets                       # (27, 3)
+        if periodic:
+            nb_id = cell_ids_from_coords(jnp.mod(nb, dims_arr), cells.dims)
+            nb_id = jnp.where(dedupe_mask(nb_id), nb_id, n_cells)
+        else:
+            valid = ((nb >= 0) & (nb < dims_arr)).all(-1)
+            nb_id = jnp.where(valid,
+                              cell_ids_from_coords(jnp.clip(nb, 0, dims_arr - 1),
+                                                   cells.dims),
+                              n_cells)
+        return cells.table[nb_id].reshape(-1)           # (27 * capacity,)
+
+    return jax.vmap(one)(frac)

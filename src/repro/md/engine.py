@@ -11,12 +11,10 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from functools import partial
 from typing import Callable, Optional, Protocol
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from . import observables
 from .forcefield import ForceFieldConfig, classical_energy

@@ -8,8 +8,6 @@ conservative-forces contract the DP model uses (Eq. 2).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

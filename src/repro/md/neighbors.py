@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import cells
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
@@ -66,8 +68,7 @@ def brute_force_neighbor_list(pos: jax.Array, box: jax.Array, cutoff: float,
 
 
 def _cell_grid(box: np.ndarray, cutoff: float) -> tuple[int, int, int]:
-    dims = np.maximum(1, np.floor(np.asarray(box) / cutoff).astype(int))
-    return tuple(int(d) for d in dims)
+    return cells.grid_dims(box, cutoff)
 
 
 @partial(jax.jit, static_argnames=("capacity", "cell_capacity", "grid", "half"))
@@ -77,44 +78,19 @@ def cell_list_neighbor_list(pos: jax.Array, box: jax.Array, cutoff: float,
     """Cell-list construction: O(N * 27 * cell_capacity).
 
     ``grid`` is the static cell grid (use :func:`_cell_grid`), each cell edge
-    >= cutoff so 27 neighboring cells cover the interaction sphere.
+    >= cutoff so 27 neighboring cells cover the interaction sphere.  Binning
+    and candidate gathering live in :mod:`repro.md.cells` (shared with the
+    virtual-DD subdomain assembly).
     """
     n = pos.shape[0]
-    gx, gy, gz = grid
-    n_cells = gx * gy * gz
     cell_size = box / jnp.array(grid, pos.dtype)
     frac = jnp.clip(jnp.floor(pos / cell_size).astype(jnp.int32),
                     0, jnp.array(grid, jnp.int32) - 1)
-    cell_id = (frac[:, 0] * gy + frac[:, 1]) * gz + frac[:, 2]
+    cells_tab = cells.build_cell_table(cells.cell_ids_from_coords(frac, grid),
+                                       grid, cell_capacity)
+    cell_overflow = cells_tab.overflow
 
-    # Scatter atoms into (n_cells, cell_capacity) buckets via sort.
-    order = jnp.argsort(cell_id)                      # atoms grouped by cell
-    sorted_cells = cell_id[order]
-    # position within the cell = running index - first index of that cell
-    first_in_cell = jnp.searchsorted(sorted_cells, jnp.arange(n_cells))
-    slot = jnp.arange(n) - first_in_cell[sorted_cells]
-    cell_table = jnp.full((n_cells, cell_capacity), -1, jnp.int32)
-    ok = slot < cell_capacity
-    cell_table = cell_table.at[sorted_cells, jnp.clip(slot, 0, cell_capacity - 1)].set(
-        jnp.where(ok, order, -1).astype(jnp.int32))
-    cell_counts = jnp.zeros(n_cells, jnp.int32).at[cell_id].add(1)
-    cell_overflow = (cell_counts > cell_capacity).any()
-
-    # Candidate set: atoms in my cell + 26 neighbors (periodic wrap).
-    offsets = jnp.array([(i, j, k) for i in (-1, 0, 1) for j in (-1, 0, 1)
-                         for k in (-1, 0, 1)], jnp.int32)  # (27, 3)
-
-    def candidates(ci):
-        c = frac[ci]
-        nb = jnp.mod(c[None, :] + offsets, jnp.array(grid, jnp.int32))
-        nb_id = (nb[:, 0] * gy + nb[:, 1]) * gz + nb[:, 2]
-        # degenerate grids (dim < 3) alias cells; dedupe by masking repeats
-        uniq = _dedupe_mask(nb_id)
-        cand = cell_table[nb_id]                       # (27, cell_capacity)
-        cand = jnp.where(uniq[:, None], cand, -1)
-        return cand.reshape(-1)                        # (27 * cell_capacity,)
-
-    cand = jax.vmap(candidates)(jnp.arange(n))         # (N, C27)
+    cand = cells.neighborhood_candidates(cells_tab, frac, periodic=True)
     cand_pos = pos[jnp.where(cand >= 0, cand, 0)]
     dr = minimum_image(cand_pos - pos[:, None, :], box)
     within = ((dr ** 2).sum(-1) < cutoff ** 2) & (cand >= 0) & (cand != jnp.arange(n)[:, None])
@@ -133,13 +109,6 @@ def cell_list_neighbor_list(pos: jax.Array, box: jax.Array, cutoff: float,
     overflow = (counts > capacity).any() | cell_overflow
     return NeighborList(idx=idx.astype(jnp.int32), mask=take.astype(pos.dtype),
                         ref_positions=pos, overflow=overflow)
-
-
-def _dedupe_mask(ids: jax.Array) -> jax.Array:
-    """Mask marking the first occurrence of each value in a small 1-D array."""
-    m = ids[:, None] == ids[None, :]
-    first = jnp.argmax(m, axis=1)  # index of first equal element
-    return first == jnp.arange(ids.shape[0])
 
 
 def build_neighbor_list(pos: jax.Array, box, cutoff: float, capacity: int,

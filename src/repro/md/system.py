@@ -11,7 +11,6 @@ Units (GROMACS convention):
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional
 
 import jax

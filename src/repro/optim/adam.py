@@ -8,9 +8,7 @@ per-device HBM budget (see EXPERIMENTS.md memory analysis).
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp

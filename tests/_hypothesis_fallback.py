@@ -1,0 +1,107 @@
+"""Minimal deterministic stand-in for ``hypothesis`` used when the real
+package is absent (hermetic containers where ``pip install`` is unavailable).
+
+Implements exactly the surface this suite uses — ``given``, ``settings``,
+``strategies.{integers,floats,booleans,sampled_from}``, ``assume`` — by
+drawing ``max_examples`` pseudo-random samples from a per-test seeded RNG.
+No shrinking, no database: this is a sampler, not a property-based engine.
+CI installs real hypothesis (see pyproject ``[project.optional-dependencies]``)
+and this module is then never imported; ``conftest.py`` decides.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import sys
+import types
+import zlib
+
+
+class _Unsatisfied(Exception):
+    pass
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def sample(self, rng):
+        return self._draw(rng)
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def floats(min_value, max_value):
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def booleans():
+    return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[int(rng.integers(0, len(elements)))])
+
+
+def settings(max_examples: int = 20, deadline=None, **_ignored):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def assume(condition):
+    if not condition:
+        raise _Unsatisfied
+
+
+def given(**strategy_kwargs):
+    def deco(fn):
+        sig = inspect.signature(fn)
+        passthrough = [p for name, p in sig.parameters.items()
+                       if name not in strategy_kwargs]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            import numpy as np
+            seed = zlib.crc32(f"{fn.__module__}.{fn.__qualname__}".encode())
+            rng = np.random.default_rng(seed)
+            n = getattr(wrapper, "_fallback_max_examples", 20)
+            ran = 0
+            for _ in range(n):
+                drawn = {k: s.sample(rng) for k, s in strategy_kwargs.items()}
+                try:
+                    fn(*args, **kwargs, **drawn)
+                    ran += 1
+                except _Unsatisfied:
+                    continue
+            if n > 0 and ran == 0:
+                # mirror real hypothesis: an unsatisfiable assume() is an
+                # error, not a silent green test that asserted nothing
+                raise AssertionError(
+                    f"{fn.__qualname__}: assume() rejected all {n} examples")
+
+        # pytest must see only the non-drawn parameters (fixtures)
+        wrapper.__signature__ = sig.replace(parameters=passthrough)
+        return wrapper
+    return deco
+
+
+def install() -> None:
+    """Register ``hypothesis`` / ``hypothesis.strategies`` stub modules."""
+    mod = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    for f in (integers, floats, booleans, sampled_from):
+        setattr(st, f.__name__, f)
+    mod.given = given
+    mod.settings = settings
+    mod.assume = assume
+    mod.strategies = st
+    mod.HealthCheck = types.SimpleNamespace(
+        too_slow=None, data_too_large=None, filter_too_much=None)
+    mod.__is_fallback__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st

@@ -7,6 +7,12 @@ import sys
 import numpy as np
 import pytest
 
+try:  # real hypothesis when installed (CI); deterministic sampler otherwise
+    import hypothesis  # noqa: F401
+except ImportError:
+    from _hypothesis_fallback import install as _install_hypothesis_fallback
+    _install_hypothesis_fallback()
+
 
 @pytest.fixture(scope="session")
 def rng():

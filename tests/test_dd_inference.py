@@ -6,7 +6,6 @@ Multi-device execution requires forced host devices, so these run in a
 subprocess (tests proper must see one device)."""
 import json
 
-import numpy as np
 import pytest
 
 from conftest import run_in_subprocess
@@ -25,7 +24,8 @@ types = jnp.asarray(rng.integers(0, 4, n), jnp.int32)
 model = DPModel(paper_dpa1_config(ntypes=4, rcut=0.6, sel=48))
 params = model.init_params(jax.random.PRNGKey(0))
 e_ref, f_ref = single_domain_forces(model, params, coords, types, box, 64)
-mesh = jax.make_mesh((8,), ("dd",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_dd_mesh
+mesh = make_dd_mesh(8)
 out = {}
 for force_mode in ["owner_full", "ghost_reduce"]:
     for balanced in [False, True]:

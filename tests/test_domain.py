@@ -1,8 +1,6 @@
 """Virtual DD partitioning properties (paper Sec. IV-A) — single device."""
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.domain import (IMAGE_SHIFTS, balanced_planes, factor_grid,

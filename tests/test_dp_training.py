@@ -1,5 +1,4 @@
 """DP training pipeline: loss goes down, RMSE computed, resume works."""
-import jax
 import numpy as np
 import pytest
 

@@ -1,5 +1,4 @@
 """Classical force field: conservation, symmetry, PME correctness."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,12 +1,12 @@
 """Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret=True."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ref
-from repro.kernels.ops import attention_op, env_mat_op, nbr_attention_op
+from repro.kernels.ops import (attention_op, cell_filter_op, env_mat_op,
+                               nbr_attention_op)
 
 RNG = np.random.default_rng(0)
 
@@ -23,6 +23,33 @@ def test_env_mat_kernel(n, k, dtype):
     for g, w in zip(got, want):
         np.testing.assert_allclose(np.asarray(g), np.asarray(w),
                                    rtol=3e-5, atol=3e-6)
+
+
+@pytest.mark.parametrize("n,m", [(8, 128), (37, 200), (1, 27), (64, 432)])
+def test_cell_filter_kernel(n, m):
+    dx, dy, dz = (jnp.asarray(RNG.normal(0, 0.5, (n, m)), jnp.float32)
+                  for _ in range(3))
+    valid = jnp.asarray(RNG.random((n, m)) > 0.3, jnp.float32)
+    got = cell_filter_op(dx, dy, dz, valid, 0.6, use_pallas=True,
+                         interpret=True)
+    want = ref.cell_filter_ref(dx, dy, dz, valid, 0.6)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 40), m=st.integers(1, 96), seed=st.integers(0, 99))
+def test_cell_filter_property(n, m, seed):
+    """Property: a flag is set iff the candidate is valid AND inside the
+    cutoff sphere — never for padded/self entries."""
+    r = np.random.default_rng(seed)
+    dx, dy, dz = (jnp.asarray(r.normal(0, 0.5, (n, m)), jnp.float32)
+                  for _ in range(3))
+    valid = jnp.asarray(r.random((n, m)) > 0.5, jnp.float32)
+    got = np.asarray(cell_filter_op(dx, dy, dz, valid, 0.6, use_pallas=True,
+                                    interpret=True))
+    d2 = np.asarray(dx) ** 2 + np.asarray(dy) ** 2 + np.asarray(dz) ** 2
+    want = ((d2 < 0.36) & (np.asarray(valid) > 0)).astype(np.float32)
+    np.testing.assert_array_equal(got, want)
 
 
 @pytest.mark.parametrize("n,k,m,h", [(13, 24, 64, 96), (8, 16, 32, 32),

@@ -1,7 +1,6 @@
 """Neighbor-list correctness: cell list == brute force (hypothesis)."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.md.neighbors import (brute_force_neighbor_list,

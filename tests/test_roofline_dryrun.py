@@ -35,7 +35,8 @@ _PARSE_CODE = r"""
 import jax, jax.numpy as jnp, json
 from jax.sharding import PartitionSpec as P, NamedSharding
 
-mesh = jax.make_mesh((8,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.compat import make_mesh
+mesh = make_mesh((8,), ("x",))
 # stacked per-step weights: the per-iteration slice w_i is scan-carried data,
 # so its gather CANNOT be hoisted out of the loop
 W = jax.ShapeDtypeStruct((5, 128, 128), jnp.float32,

@@ -5,9 +5,6 @@ import sys
 import os
 
 import jax
-import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.configs import ARCHS, SHAPES, applicable_shapes, param_count
 
