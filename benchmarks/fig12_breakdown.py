@@ -19,7 +19,7 @@ import os, time, json
 import jax, jax.numpy as jnp, numpy as np
 from repro.dp import DPModel, paper_dpa1_config
 from repro.core import suggest_config
-from repro.core.ddinfer import _rank_forces, _subdomain_nbr_list
+from repro.core.ddinfer import _subdomain_nbr_list
 from repro.core.domain import uniform_grid
 
 rng = np.random.default_rng(0)

@@ -11,11 +11,12 @@ import traceback
 
 
 def main() -> None:
-    from . import (dd_scaling, fig7_training, fig8_validation, fig9_overhead,
-                   fig10_strong_scaling, fig11_weak_scaling, fig12_breakdown,
-                   roofline_bench)
+    from . import (dd_reuse, dd_scaling, fig7_training, fig8_validation,
+                   fig9_overhead, fig10_strong_scaling, fig11_weak_scaling,
+                   fig12_breakdown, roofline_bench)
     modules = [
         ("dd_scaling", dd_scaling),
+        ("dd_reuse", dd_reuse),
         ("fig10_strong_scaling", fig10_strong_scaling),
         ("fig11_weak_scaling", fig11_weak_scaling),
         ("fig9_overhead", fig9_overhead),

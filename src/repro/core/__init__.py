@@ -2,6 +2,9 @@
 from .domain import (VirtualGrid, uniform_grid, balanced_planes, factor_grid,  # noqa: F401
                      select_local, select_ghosts, partition_costs,
                      bin_atoms, select_local_cells, select_ghosts_cells)
-from .ddinfer import (DDConfig, suggest_config, make_distributed_force_fn,  # noqa: F401
-                      single_domain_forces)
+from .ddinfer import (DDConfig, DDState, suggest_config,  # noqa: F401
+                      make_distributed_force_fn, make_assembly_fn,
+                      make_evaluation_fn, make_displacement_check_fn,
+                      single_domain_forces, single_domain_state,
+                      single_domain_forces_nlist)
 from .nnpot import DeepmdForceProvider, UnitConversion  # noqa: F401

@@ -13,6 +13,18 @@ Per MD step (paper Fig. 6):
 
 Implemented with ``shard_map`` over a named mesh axis — ``jax.lax``
 collectives are the TPU-native stand-in for the paper's MPI calls.
+
+Amortized decomposition (the GROMACS ``nstlist`` analogue, beyond the
+paper's per-step schedule): the pipeline is split into an **assembly**
+phase producing a persistent per-rank :class:`DDState` (local/ghost index
+sets, integer image shifts, subdomain neighbor list, reference positions)
+built with halos and list cutoffs widened by ``DDConfig.skin``, and an
+**evaluation** phase that reuses the state across steps — recomputing only
+buffer coordinates from fresh positions and re-filtering the stale list to
+the exact cutoff.  A max-displacement check against the stored reference
+(pmax'd across the mesh, mirroring ``md.neighbors.needs_rebuild``) decides
+when the state must be rebuilt: no atom may move more than ``skin / 2``
+between rebuilds.
 """
 from __future__ import annotations
 
@@ -27,6 +39,7 @@ from .. import compat
 from ..dp.model import DPModel
 from ..kernels.ops import cell_filter_op
 from ..md import cells as cellmod
+from ..md.neighbors import max_displacement2, minimum_image
 from .domain import (IMAGE_SHIFTS, VirtualGrid, balanced_planes, bin_atoms,
                      factor_grid, select_ghosts, select_ghosts_cells,
                      select_local, select_local_cells, uniform_grid)
@@ -57,25 +70,56 @@ class DDConfig:
     cell_capacity: int = 0       # atoms per global cell
     local_region: tuple[int, int, int] = (0, 0, 0)   # cells covering subdomain
     ghost_region: tuple[int, int, int] = (0, 0, 0)   # cells covering halo expansion
-    # open-boundary cell grid over the subdomain buffer (edge = r_c):
+    # open-boundary cell grid over the subdomain buffer (edge = r_c + skin):
     subcell_dims: tuple[int, int, int] = (0, 0, 0)
     subcell_capacity: int = 0
     use_pallas: bool = False     # cell-filter kernel vs jnp reference
+    # --- assembly amortization (GROMACS nstlist analogue) -----------------
+    skin: float = 0.0            # Verlet buffer; 0 = rebuild every step
+    nbr_capacity_eval: int = 0   # K after exact-cutoff compaction (0 = K)
 
     @property
     def n_ranks(self) -> int:
         gx, gy, gz = self.grid_dims
         return gx * gy * gz
 
+    @property
+    def k_eval(self) -> int:
+        """Model-facing neighbor capacity: the skin-widened *build* list is
+        compacted down to this many exact-cutoff entries at evaluation, so
+        the model tensors do not pay for the skin volume."""
+        return self.nbr_capacity_eval or self.nbr_capacity
+
+    @property
+    def halo_hops(self) -> int:
+        """Cutoff hops the halo must cover: descriptors of exported ghosts
+        (owner_full, 2 hops) or of local atoms only (ghost_reduce, 1 hop)."""
+        return 2 if self.force_mode == "owner_full" else 1
+
+    @property
+    def halo_eff(self) -> float:
+        """Selection halo including skin margin: every cutoff hop can widen
+        by one ``skin`` (each endpoint drifts up to skin/2 between rebuilds),
+        so a k-hop halo needs k * skin of extra slack."""
+        return self.halo + self.halo_hops * self.skin
+
+    def padded_atoms(self, n_atoms: int) -> int:
+        """Atom-axis size padded up to a mesh multiple (shard_map sharding
+        and tiled ``psum_scatter`` both require divisibility)."""
+        return -(-n_atoms // self.n_ranks) * self.n_ranks
+
     def validate(self, box) -> None:
         box = np.asarray(box)
         widths = box / np.asarray(self.grid_dims)
         if (widths < 1e-6).any():
             raise ValueError("degenerate subdomain")
-        if (self.halo > box / 2).any():
+        if (self.halo_eff > box / 2).any():
             raise ValueError(
-                f"halo {self.halo} exceeds half box {box/2}: periodic ghost "
-                "images would alias; use fewer ranks or a bigger box")
+                f"halo+skin {self.halo_eff} exceeds half box {box/2}: periodic "
+                "ghost images would alias; use fewer ranks, a smaller skin, "
+                "or a bigger box")
+        if self.skin < 0:
+            raise ValueError("skin must be >= 0")
         if self.nbr_method not in ("dense", "cells"):
             raise ValueError(f"unknown nbr_method {self.nbr_method!r}")
         if self.nbr_method == "cells":
@@ -86,6 +130,31 @@ class DDConfig:
                     "nbr_method='cells' needs cell_dims/cell_capacity/"
                     "subcell_dims/subcell_capacity/local_region/ghost_region "
                     "sized > 0 (use suggest_config)")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DDState:
+    """Persistent assembly state, reused across evaluation steps.
+
+    Per-rank leaves are stacked along the mesh axis (leading dimension
+    ``n_ranks * capacity``); the scalar diagnostics and ``ref`` (the padded
+    global reference positions the state was built at) are replicated.
+    """
+
+    l_idx: jax.Array       # (P*Cl,) int32 local atom indices (0-padded)
+    l_mask: jax.Array      # (P*Cl,) bool
+    g_idx: jax.Array       # (P*Cg,) int32 ghost atom indices
+    g_shift: jax.Array     # (P*Cg, 3) int32 integer periodic image shifts
+    g_mask: jax.Array      # (P*Cg,) bool
+    buf_types: jax.Array   # (P*C,) int32 subdomain buffer types
+    buf_mask: jax.Array    # (P*C,) float {0,1} buffer validity
+    nbr_idx: jax.Array     # (P*C, K) int32 list at cutoff r_c + skin
+    nbr_mask: jax.Array    # (P*C, K) float {0,1}
+    local_count: jax.Array  # () int32, psum'd over ranks
+    ghost_count: jax.Array  # () int32, psum'd over ranks
+    overflow: jax.Array    # () int32, psum'd over ranks; != 0 => invalid
+    ref: jax.Array         # (n_pad, 3) reference positions at build time
 
 
 def _max_rank_counts(coords, box, dims: tuple[int, int, int], halo: float,
@@ -144,7 +213,7 @@ def suggest_config(n_atoms: int, box, n_ranks: int, rcut: float,
                    force_mode: str = "owner_full",
                    nbr_method: str = "cells",
                    use_pallas: bool = False,
-                   coords=None) -> DDConfig:
+                   coords=None, skin: float = 0.0) -> DDConfig:
     """Capacity heuristics from density; overflow flags catch underestimates.
 
     The cell path's grids are sized so the *worst-case* subdomain (balanced
@@ -154,21 +223,33 @@ def suggest_config(n_atoms: int, box, n_ranks: int, rcut: float,
     sized from the *actual* max cell occupancy instead of mean density —
     essential for clustered (protein-in-vacuum) systems where local density
     exceeds the mean by an order of magnitude.
+
+    ``skin`` widens every selection halo, cell grid, and the subdomain list
+    cutoff so an assembled :class:`DDState` stays valid until any atom moves
+    more than ``skin / 2`` (the GROMACS ``nstlist``/Verlet-buffer trick);
+    ``nbr_capacity`` is scaled by the cutoff-sphere volume ratio.
     """
     box = np.asarray(box, np.float64)
     dims = factor_grid(n_ranks, box)
-    halo = 2.0 * rcut if force_mode == "owner_full" else rcut
+    hops = 2 if force_mode == "owner_full" else 1
+    halo = hops * rcut
+    halo_eff = halo + hops * skin
+    r_list = rcut + skin
+    nbr_capacity_eval = nbr_capacity
+    if skin > 0:
+        nbr_capacity = int(np.ceil(nbr_capacity * (r_list / rcut) ** 3))
     density = n_atoms / box.prod()
     sub = box / np.asarray(dims)
     local_cap = int(slack * n_atoms / n_ranks) + 8
-    exp_vol = np.minimum(sub + 2 * halo, box).prod()
+    exp_vol = np.minimum(sub + 2 * halo_eff, box).prod()
     ghost_cap = int(slack * density * (exp_vol - sub.prod())) + 16
     ghost_cap = min(ghost_cap, 27 * n_atoms)
     if coords is not None:
         # exact per-rank local/ghost maxima for the *initial* configuration
         # (mean-density heuristics undershoot badly on clustered systems);
         # the 1.25 margin absorbs MD drift, overflow flags catch the rest
-        loc_max, gho_max = _max_rank_counts(coords, box, dims, halo, balanced)
+        loc_max, gho_max = _max_rank_counts(coords, box, dims, halo_eff,
+                                            balanced)
         local_cap = max(local_cap, int(np.ceil(1.25 * loc_max)) + 8)
         ghost_cap = max(ghost_cap, min(int(np.ceil(1.25 * gho_max)) + 16,
                                        27 * n_atoms))
@@ -178,9 +259,9 @@ def suggest_config(n_atoms: int, box, n_ranks: int, rcut: float,
     g = np.asarray(dims, np.float64)
     max_sub = sub if not balanced else box - (g - 1) * 0.25 * box / g
 
-    # global grid: cell edge >= halo (keeps the halo expansion one cell
+    # global grid: cell edge >= halo_eff (keeps the halo expansion one cell
     # thick) but coarse enough for ~4 atoms per cell on average
-    target_edge = max(halo, (4.0 / max(density, 1e-12)) ** (1.0 / 3.0))
+    target_edge = max(halo_eff, (4.0 / max(density, 1e-12)) ** (1.0 / 3.0))
     cell_dims = cellmod.grid_dims(box, target_edge)
     cw = box / np.asarray(cell_dims)
     cell_cap = cellmod.suggest_cell_capacity(density, cw.prod(),
@@ -189,27 +270,29 @@ def suggest_config(n_atoms: int, box, n_ranks: int, rcut: float,
         cell_cap = max(cell_cap, int(np.ceil(
             max(slack, 1.25) * _max_cell_occupancy(coords, box, cell_dims))))
     local_region = tuple(int(np.ceil(max_sub[a] / cw[a])) + 1 for a in range(3))
-    ghost_region = tuple(int(np.ceil((max_sub[a] + 2 * halo) / cw[a])) + 1
+    ghost_region = tuple(int(np.ceil((max_sub[a] + 2 * halo_eff) / cw[a])) + 1
                          for a in range(3))
 
-    # subdomain buffer grid: fixed edge r_c anchored at lo - halo so the
-    # 27-cell neighborhood always covers the cutoff sphere
-    subcell_dims = tuple(int(np.ceil((max_sub[a] + 2 * halo) / rcut)) + 1
-                         for a in range(3))
-    subcell_cap = cellmod.suggest_cell_capacity(density, rcut ** 3,
+    # subdomain buffer grid: fixed edge r_c + skin anchored at lo - halo_eff
+    # so the 27-cell neighborhood always covers the (skinned) cutoff sphere
+    subcell_dims = tuple(
+        int(np.ceil((max_sub[a] + 2 * halo_eff) / r_list)) + 1
+        for a in range(3))
+    subcell_cap = cellmod.suggest_cell_capacity(density, r_list ** 3,
                                                 slack=max(slack, 2.0))
     if coords is not None:
         # rigorous bound for the shifted-origin subdomain grid; the 1.25
         # margin absorbs MD drift (the bound itself is already conservative)
         subcell_cap = max(subcell_cap, int(np.ceil(
-            1.25 * _max_shifted_cell_occupancy(coords, box, rcut))))
+            1.25 * _max_shifted_cell_occupancy(coords, box, r_list))))
     return DDConfig(grid_dims=dims, local_capacity=local_cap,
                     ghost_capacity=ghost_cap, nbr_capacity=nbr_capacity,
                     halo=halo, balanced=balanced, force_mode=force_mode,
                     nbr_method=nbr_method, cell_dims=cell_dims,
                     cell_capacity=cell_cap, local_region=local_region,
                     ghost_region=ghost_region, subcell_dims=subcell_dims,
-                    subcell_capacity=subcell_cap, use_pallas=use_pallas)
+                    subcell_capacity=subcell_cap, use_pallas=use_pallas,
+                    skin=skin, nbr_capacity_eval=nbr_capacity_eval)
 
 
 # ---------------------------------------------------------------------------
@@ -258,8 +341,8 @@ def _subdomain_nbr_list_cells(buf_coords: jax.Array, buf_mask: jax.Array,
     # a *valid* atom outside the grid means subcell_dims was undersized
     range_overflow = (~in_range & (buf_mask > 0)).any()
     frac = jnp.clip(frac, 0, dims_arr - 1)
-    ids = jnp.where(in_range, cellmod.cell_ids_from_coords(frac, dims),
-                    n_cells)
+    ids = cellmod.route_invalid(cellmod.cell_ids_from_coords(frac, dims),
+                                in_range, n_cells)
     table = cellmod.build_cell_table(ids, dims, cell_capacity)
 
     cand = cellmod.neighborhood_candidates(table, frac, periodic=False)
@@ -284,122 +367,351 @@ def _subdomain_nbr_list_cells(buf_coords: jax.Array, buf_mask: jax.Array,
     return idx.astype(jnp.int32), take, overflow
 
 
-def _rank_forces(model: DPModel, params, coords_all, types_all, box,
-                 grid: VirtualGrid, cfg: DDConfig, rank, rcut: float):
-    """Assemble one rank's subdomain and run masked DP inference.
+def _park(buf_coords: jax.Array, buf_mask: jax.Array, box) -> jax.Array:
+    """Park padded buffer entries far away so they can never enter a cutoff
+    sphere (each at a distinct position so they cannot pair up either)."""
+    park = jnp.asarray(box).max() * 10.0 * (
+        1.0 + jnp.arange(buf_coords.shape[0], dtype=buf_coords.dtype))[:, None]
+    return jnp.where(buf_mask[:, None] > 0, buf_coords,
+                     park + jnp.asarray(box) * 3.0)
 
-    Returns (energy_local_sum, force_global (N,3) scatter-added, diag dict).
+
+def _assemble_rank(coords_all, types_all, box, grid: VirtualGrid,
+                   cfg: DDConfig, rcut: float, rank, n_real: int) -> dict:
+    """Assembly phase for one rank: selection + subdomain neighbor list.
+
+    Runs on the replicated (post-all-gather) coordinate buffer, which may be
+    padded up to a mesh multiple — ``n_real`` marks the real atoms; padding
+    is parked outside the box and excluded from residence/binning.
+    Halos and the list cutoff are widened by ``cfg.skin`` so the result
+    stays valid while no atom moves more than skin/2.
     """
     n = coords_all.shape[0]
+    halo = cfg.halo_eff
+    r_list = rcut + cfg.skin
+    valid = (jnp.arange(n) < n_real) if n_real != n else None
     sel_overflow = jnp.asarray(False)
     if cfg.nbr_method == "cells":
-        table = bin_atoms(coords_all, box, cfg.cell_dims, cfg.cell_capacity)
+        table = bin_atoms(coords_all, box, cfg.cell_dims, cfg.cell_capacity,
+                          valid=valid)
         l_idx, l_mask, l_count, l_ovf = select_local_cells(
             coords_all, grid, rank, cfg.local_capacity, table,
-            cfg.local_region, box)
-        g_idx, g_shift, g_mask, g_count, g_ovf = select_ghosts_cells(
-            coords_all, box, grid, rank, cfg.halo, cfg.ghost_capacity,
+            cfg.local_region, box, valid=valid)
+        g_idx, g_shift_vec, g_mask, g_count, g_ovf = select_ghosts_cells(
+            coords_all, box, grid, rank, halo, cfg.ghost_capacity,
             table, cfg.ghost_region)
         sel_overflow = l_ovf | g_ovf
     else:
         l_idx, l_mask, l_count = select_local(coords_all, grid, rank,
-                                              cfg.local_capacity)
-        g_idx, g_shift, g_mask, g_count = select_ghosts(
-            coords_all, box, grid, rank, cfg.halo, cfg.ghost_capacity)
+                                              cfg.local_capacity, valid=valid)
+        g_idx, g_shift_vec, g_mask, g_count = select_ghosts(
+            coords_all, box, grid, rank, halo, cfg.ghost_capacity)
+    # integer image shifts: exact (shift vectors are +-1/0 multiples of box),
+    # and composable with the wrap-correction applied at evaluation time
+    g_shift = jnp.round(g_shift_vec / jnp.asarray(box)).astype(jnp.int32)
 
     buf_coords = jnp.concatenate([coords_all[l_idx],
-                                  coords_all[g_idx] + g_shift])
+                                  coords_all[g_idx] + g_shift_vec])
     buf_types = jnp.concatenate([types_all[l_idx], types_all[g_idx]])
     buf_mask = jnp.concatenate([l_mask, g_mask]).astype(coords_all.dtype)
-    # park padded entries far away so they can never enter a cutoff sphere
-    park = jnp.asarray(box).max() * 10.0 * (
-        1.0 + jnp.arange(buf_coords.shape[0], dtype=coords_all.dtype))[:, None]
-    buf_coords = jnp.where(buf_mask[:, None] > 0, buf_coords,
-                           park + jnp.asarray(box) * 3.0)
+    buf_coords = _park(buf_coords, buf_mask, box)
 
     if cfg.nbr_method == "cells":
         lo, _ = grid.bounds(rank)
-        nbr_idx, nbr_mask, nbr_overflow = _subdomain_nbr_list_cells(
-            buf_coords, buf_mask, rcut, cfg.nbr_capacity,
-            origin=lo - cfg.halo, dims=cfg.subcell_dims,
+        nbr_idx, nbr_take, nbr_overflow = _subdomain_nbr_list_cells(
+            buf_coords, buf_mask, r_list, cfg.nbr_capacity,
+            origin=lo - halo, dims=cfg.subcell_dims,
             cell_capacity=cfg.subcell_capacity, use_pallas=cfg.use_pallas)
     else:
-        nbr_idx, nbr_mask, nbr_overflow = _subdomain_nbr_list(
-            buf_coords, buf_mask, rcut, cfg.nbr_capacity)
-    nbr_overflow = nbr_overflow | sel_overflow
+        nbr_idx, nbr_take, nbr_overflow = _subdomain_nbr_list(
+            buf_coords, buf_mask, r_list, cfg.nbr_capacity)
+    overflow = (nbr_overflow | sel_overflow
+                | (l_count > cfg.local_capacity)
+                | (g_count > cfg.ghost_capacity))
+    return dict(l_idx=l_idx, l_mask=l_mask, g_idx=g_idx, g_shift=g_shift,
+                g_mask=g_mask, buf_types=buf_types, buf_mask=buf_mask,
+                nbr_idx=nbr_idx, nbr_mask=nbr_take.astype(coords_all.dtype),
+                local_count=l_count, ghost_count=g_count, overflow=overflow)
 
+
+def _evaluate_rank(model: DPModel, params, coords_all, ref_all, st: dict,
+                   box, cfg: DDConfig, rcut: float):
+    """Evaluation phase for one rank: reuse the assembled state at fresh
+    positions.
+
+    Buffer coordinates are rebuilt as ``current + (stored_shift - img) * box``
+    where ``img`` is the integer box crossing since the reference — an exact
+    unwrap (the correction is an integer multiple of the box), so when
+    ``ref_all is coords_all`` (fused per-step path) this reproduces the
+    assembly-time buffer bitwise.  The stale skin-widened list is re-filtered
+    to the exact cutoff at current positions: DPA-1's attention softmax is
+    *not* oblivious to zero-envelope in-list neighbors, so the filter keeps
+    evaluation independent of which beyond-r_c entries the list carries.
+    """
+    n = coords_all.shape[0]
+    dtype = coords_all.dtype
+    box = jnp.asarray(box)
+    l_idx, g_idx = st["l_idx"], st["g_idx"]
+    img_l = jnp.round((coords_all[l_idx] - ref_all[l_idx]) / box)
+    img_g = jnp.round((coords_all[g_idx] - ref_all[g_idx]) / box)
+    buf_l = coords_all[l_idx] - img_l.astype(dtype) * box
+    buf_g = coords_all[g_idx] + (st["g_shift"].astype(dtype) - img_g) * box
+    buf_coords = _park(jnp.concatenate([buf_l, buf_g]), st["buf_mask"], box)
+
+    # re-filter the (skin-widened, possibly stale) list to the exact cutoff
+    nbr_idx = st["nbr_idx"]
+    dr = buf_coords[nbr_idx] - buf_coords[:, None, :]
+    d2 = (dr ** 2).sum(-1)
+    nbr_mask = st["nbr_mask"] * (d2 < rcut ** 2)
+    # canonical compaction: surviving entries sorted by buffer index, zeroed
+    # tail, trimmed to k_eval — the model input then depends only on the
+    # *within-cutoff* pair set, so a stale list gives bitwise-identical
+    # forces to a fresh one no matter which beyond-r_c borderline entries
+    # the two lists carry, and the model tensors stay at the unskinned K.
+    # On a fresh list at skin 0 (already index-sorted, compact, k_eval = K)
+    # this is the identity.
+    k_eval = min(cfg.k_eval, nbr_idx.shape[1])
+    trim_overflow = ((nbr_mask > 0).sum(1) > k_eval).any()
+    score = jnp.where(nbr_mask > 0, -nbr_idx.astype(jnp.float32), -jnp.inf)
+    _, order = jax.lax.top_k(score, k_eval)
+    nbr_mask = jnp.take_along_axis(nbr_mask, order, axis=1)
+    nbr_idx = jnp.where(nbr_mask > 0,
+                        jnp.take_along_axis(nbr_idx, order, axis=1), 0)
+
+    l_mask = st["l_mask"]
     local_mask = jnp.concatenate([
-        l_mask.astype(coords_all.dtype),
-        jnp.zeros(cfg.ghost_capacity, coords_all.dtype)])
+        l_mask.astype(dtype), jnp.zeros(cfg.ghost_capacity, dtype)])
 
-    f_global = jnp.zeros((n, 3), coords_all.dtype)
+    f_global = jnp.zeros((n, 3), dtype)
     if cfg.force_mode == "owner_full":
         # Paper Sec. IV-A: the 2*r_c halo makes every first-layer ghost's
         # descriptor exact, so differentiating the *full* buffer energy gives
         # complete forces on local atoms; ghost rows are discarded and the
         # final collective only assembles (each row has exactly one writer).
         e_local, f_buf = model.energy_and_forces_dual(
-            params, buf_coords, buf_types, nbr_idx,
-            nbr_mask.astype(coords_all.dtype),
-            force_mask=buf_mask, report_mask=local_mask, box=None)
+            params, buf_coords, st["buf_types"], nbr_idx, nbr_mask,
+            force_mask=st["buf_mask"], report_mask=local_mask, box=None)
         f_global = f_global.at[l_idx].add(f_buf[: cfg.local_capacity]
                                           * l_mask[:, None])
     else:
         # Eq. 7 ghost-masking: energy over local atoms only; partial forces
         # land on ghosts and are summed onto the owners by collective 2.
         e_local, f_buf = model.energy_and_forces(
-            params, buf_coords, buf_types, nbr_idx,
-            nbr_mask.astype(coords_all.dtype), local_mask, box=None)
+            params, buf_coords, st["buf_types"], nbr_idx, nbr_mask,
+            local_mask, box=None)
         f_global = f_global.at[l_idx].add(f_buf[: cfg.local_capacity]
                                           * l_mask[:, None])
         f_global = f_global.at[g_idx].add(f_buf[cfg.local_capacity:]
-                                          * g_mask[:, None])
-    diag = {
-        "local_count": l_count, "ghost_count": g_count,
-        "overflow": (l_count > cfg.local_capacity)
-                    | (g_count > cfg.ghost_capacity) | nbr_overflow,
-    }
-    return e_local, f_global, diag
+                                          * st["g_mask"][:, None])
+    return e_local, f_global, trim_overflow
 
 
 # ---------------------------------------------------------------------------
 # shard_map drivers
 # ---------------------------------------------------------------------------
 
-def make_distributed_force_fn(model: DPModel, cfg: DDConfig, mesh: Mesh,
-                              box, n_atoms: int):
-    """Build the jitted SPMD force function.
+def _pad_atoms(coords: jax.Array, n_pad: int, box, types=None):
+    """Pad the atom axis to a mesh multiple; padding is parked far below the
+    box (never resident, never a ghost) at distinct positions, and is
+    deterministic so reference-vs-current displacement of a pad is zero."""
+    n = coords.shape[0]
+    if n == n_pad:
+        return (coords, types) if types is not None else coords
+    park = -(jnp.asarray(box).max()
+             * (2.0 + jnp.arange(n_pad - n, dtype=coords.dtype)))
+    pad = jnp.broadcast_to(park[:, None], (n_pad - n, 3))
+    out = jnp.concatenate([coords, pad])
+    if types is None:
+        return out
+    return out, jnp.concatenate([types, jnp.zeros(n_pad - n, types.dtype)])
 
-    Signature: f(params, coords_sharded (N,3), types (N,)) ->
-    (energy (), forces (N,3) [sharded or replicated], diag).
-    Coordinates come in sharded along the atom axis (as the host engine
-    holds them); collective 1 (all-gather) materializes the replicated
-    buffer — exactly the paper's first MPI call.
+
+def _make_grid(coords_all, box, cfg: DDConfig, n_real: int) -> VirtualGrid:
+    if cfg.balanced:
+        # quantiles over the *real* atoms only (padding would skew planes)
+        return balanced_planes(coords_all[:n_real], box, cfg.grid_dims)
+    return uniform_grid(box, cfg.grid_dims)
+
+
+def _state_specs(axis: str) -> DDState:
+    return DDState(
+        l_idx=P(axis), l_mask=P(axis), g_idx=P(axis),
+        g_shift=P(axis, None), g_mask=P(axis), buf_types=P(axis),
+        buf_mask=P(axis), nbr_idx=P(axis, None), nbr_mask=P(axis, None),
+        local_count=P(), ghost_count=P(), overflow=P(), ref=P(None, None))
+
+
+def make_assembly_fn(model: DPModel, cfg: DDConfig, mesh: Mesh, box,
+                     n_atoms: int):
+    """Build the jitted assembly phase: coords (N,3), types (N,) -> DDState.
+
+    The state is built at halo/cutoff ``+ skin`` and stays valid (bitwise-
+    reproducing a fresh assembly) until some atom moves more than skin/2
+    from ``state.ref`` — see :func:`make_displacement_check_fn`.
     """
     cfg.validate(box)
     axis = cfg.axis
     rcut = model.cfg.descriptor.rcut
     box = jnp.asarray(box)
+    n_pad = cfg.padded_atoms(n_atoms)
 
-    def per_rank(params, coords_shard, types_all):
+    def per_rank(coords_shard, types_all):
         coords_all = jax.lax.all_gather(coords_shard, axis, axis=0,
                                         tiled=True)  # collective 1
         rank = jax.lax.axis_index(axis)
-        if cfg.balanced:
-            grid = balanced_planes(coords_all, box, cfg.grid_dims)
-        else:
-            grid = uniform_grid(box, cfg.grid_dims)
-        e_local, f_global, diag = _rank_forces(
-            model, params, coords_all, types_all, box, grid, cfg, rank, rcut)
+        grid = _make_grid(coords_all, box, cfg, n_atoms)
+        st = _assemble_rank(coords_all, types_all, box, grid, cfg, rcut,
+                            rank, n_atoms)
+        st["local_count"] = jax.lax.psum(st["local_count"], axis)
+        st["ghost_count"] = jax.lax.psum(st["ghost_count"], axis)
+        st["overflow"] = jax.lax.psum(st["overflow"].astype(jnp.int32), axis)
+        return st
+
+    specs = _state_specs(axis)
+    out_specs = {f.name: getattr(specs, f.name)
+                 for f in dataclasses.fields(DDState) if f.name != "ref"}
+    mapped = compat.shard_map(per_rank, mesh=mesh,
+                              in_specs=(P(axis, None), P()),
+                              out_specs=out_specs)
+
+    def assemble(coords, types):
+        coords_p, types_p = _pad_atoms(coords, n_pad, box, types)
+        st = mapped(coords_p, types_p)
+        return DDState(ref=coords_p, **st)
+
+    return jax.jit(assemble)
+
+
+def make_evaluation_fn(model: DPModel, cfg: DDConfig, mesh: Mesh, box,
+                       n_atoms: int):
+    """Build the jitted evaluation phase.
+
+    Signature: f(params, coords (N,3), state: DDState) ->
+    (energy (), forces (N,3), diag).  Reuses the assembled state —
+    only the two per-step collectives (coordinate all-gather, force
+    reduction) plus the model inference remain; ``diag["max_disp2"]`` is the
+    mesh-wide max squared displacement from ``state.ref`` (each rank checks
+    its own shard; pmax mirrors ``md.neighbors.needs_rebuild``) and
+    ``diag["needs_rebuild"]`` its comparison against (skin/2)^2.
+    """
+    cfg.validate(box)
+    axis = cfg.axis
+    rcut = model.cfg.descriptor.rcut
+    box = jnp.asarray(box)
+    n_pad = cfg.padded_atoms(n_atoms)
+    chunk = n_pad // cfg.n_ranks
+
+    def per_rank(params, coords_shard, st: DDState):
+        coords_all = jax.lax.all_gather(coords_shard, axis, axis=0,
+                                        tiled=True)  # collective 1
+        rank = jax.lax.axis_index(axis)
+        st_d = {f.name: getattr(st, f.name)
+                for f in dataclasses.fields(DDState) if f.name != "ref"}
+        e_local, f_global, trim_ovf = _evaluate_rank(
+            model, params, coords_all, st.ref, st_d, box, cfg, rcut)
         energy = jax.lax.psum(e_local, axis)
         if cfg.reduce_mode == "reduce_scatter":
             forces = jax.lax.psum_scatter(f_global, axis, scatter_dimension=0,
                                           tiled=True)        # collective 2'
         else:
             forces = jax.lax.psum(f_global, axis)            # collective 2
-        diag = {k: jax.lax.psum(v, axis) if k != "overflow"
-                else jax.lax.psum(v.astype(jnp.int32), axis)
-                for k, v in diag.items()}
+        # skin check on this rank's shard only; pmax = the "psum'd" rebuild
+        # criterion (mirrors md.neighbors.needs_rebuild)
+        ref_shard = jax.lax.dynamic_slice_in_dim(st.ref, rank * chunk, chunk)
+        disp2 = jax.lax.pmax(max_displacement2(coords_shard, ref_shard, box),
+                             axis)
+        overflow = st.overflow + jax.lax.psum(trim_ovf.astype(jnp.int32),
+                                              axis)
+        diag = {"local_count": st.local_count, "ghost_count": st.ghost_count,
+                "overflow": overflow, "max_disp2": disp2,
+                "needs_rebuild": (disp2 > (0.5 * cfg.skin) ** 2)
+                                 | (st.overflow > 0)}
+        return energy, forces, diag
+
+    out_force_spec = (P(axis, None) if cfg.reduce_mode == "reduce_scatter"
+                      else P(None, None))
+    diag_specs = {k: P() for k in ("local_count", "ghost_count", "overflow",
+                                   "max_disp2", "needs_rebuild")}
+    mapped = compat.shard_map(
+        per_rank, mesh=mesh,
+        in_specs=(P(), P(axis, None), _state_specs(axis)),
+        out_specs=(P(), out_force_spec, diag_specs))
+
+    def evaluate(params, coords, state):
+        coords_p = _pad_atoms(coords, n_pad, box)
+        e, f, diag = mapped(params, coords_p, state)
+        return e, f[:n_atoms], diag
+
+    return jax.jit(evaluate)
+
+
+def make_displacement_check_fn(cfg: DDConfig, mesh: Mesh, box, n_atoms: int):
+    """Standalone psum'd rebuild check: f(coords (N,3), state) -> () bool.
+
+    True when any atom moved more than skin/2 since ``state.ref`` (each rank
+    scans only its shard; pmax across the mesh) or the build overflowed —
+    the distributed mirror of ``md.neighbors.needs_rebuild``.
+    """
+    axis = cfg.axis
+    box = jnp.asarray(box)
+    n_pad = cfg.padded_atoms(n_atoms)
+    chunk = n_pad // cfg.n_ranks
+
+    def per_rank(coords_shard, ref):
+        rank = jax.lax.axis_index(axis)
+        ref_shard = jax.lax.dynamic_slice_in_dim(ref, rank * chunk, chunk)
+        return jax.lax.pmax(max_displacement2(coords_shard, ref_shard, box),
+                            axis)
+
+    mapped = compat.shard_map(per_rank, mesh=mesh,
+                              in_specs=(P(axis, None), P(None, None)),
+                              out_specs=P())
+
+    def check(coords, state):
+        disp2 = mapped(_pad_atoms(coords, n_pad, box), state.ref)
+        return (disp2 > (0.5 * cfg.skin) ** 2) | (state.overflow > 0)
+
+    return jax.jit(check)
+
+
+def make_distributed_force_fn(model: DPModel, cfg: DDConfig, mesh: Mesh,
+                              box, n_atoms: int):
+    """Build the jitted SPMD force function (per-step assembly + evaluation).
+
+    Signature: f(params, coords (N,3), types (N,)) ->
+    (energy (), forces (N,3), diag).  One all-gather feeds both phases
+    (assembly runs with ``ref = current`` so the wrap-correction is exactly
+    zero); the atom axis is padded to a mesh multiple internally, so any
+    ``n_atoms`` works with either reduce mode, and the padding is sliced off
+    on return.  For amortized assembly use :func:`make_assembly_fn` +
+    :func:`make_evaluation_fn` instead.
+    """
+    cfg.validate(box)
+    axis = cfg.axis
+    rcut = model.cfg.descriptor.rcut
+    box = jnp.asarray(box)
+    n_pad = cfg.padded_atoms(n_atoms)
+
+    def per_rank(params, coords_shard, types_all):
+        coords_all = jax.lax.all_gather(coords_shard, axis, axis=0,
+                                        tiled=True)  # collective 1
+        rank = jax.lax.axis_index(axis)
+        grid = _make_grid(coords_all, box, cfg, n_atoms)
+        st = _assemble_rank(coords_all, types_all, box, grid, cfg, rcut,
+                            rank, n_atoms)
+        e_local, f_global, trim_ovf = _evaluate_rank(
+            model, params, coords_all, coords_all, st, box, cfg, rcut)
+        st["overflow"] = st["overflow"] | trim_ovf
+        energy = jax.lax.psum(e_local, axis)
+        if cfg.reduce_mode == "reduce_scatter":
+            forces = jax.lax.psum_scatter(f_global, axis, scatter_dimension=0,
+                                          tiled=True)        # collective 2'
+        else:
+            forces = jax.lax.psum(f_global, axis)            # collective 2
+        diag = {"local_count": jax.lax.psum(st["local_count"], axis),
+                "ghost_count": jax.lax.psum(st["ghost_count"], axis),
+                "overflow": jax.lax.psum(st["overflow"].astype(jnp.int32),
+                                         axis)}
         return energy, forces, diag
 
     out_force_spec = (P(axis, None) if cfg.reduce_mode == "reduce_scatter"
@@ -409,7 +721,13 @@ def make_distributed_force_fn(model: DPModel, cfg: DDConfig, mesh: Mesh,
         in_specs=(P(), P(axis, None), P()),
         out_specs=(P(), out_force_spec,
                    {"local_count": P(), "ghost_count": P(), "overflow": P()}))
-    return jax.jit(mapped)
+
+    def fn(params, coords, types):
+        coords_p, types_p = _pad_atoms(coords, n_pad, box, types)
+        e, f, diag = mapped(params, coords_p, types_p)
+        return e, f[:n_atoms], diag
+
+    return jax.jit(fn)
 
 
 def single_domain_forces(model: DPModel, params, coords, types, box,
@@ -423,3 +741,27 @@ def single_domain_forces(model: DPModel, params, coords, types, box,
     local = jnp.ones((coords.shape[0],), coords.dtype)
     return model.energy_and_forces(params, coords, types, nl.idx, nl.mask,
                                    local, box=jnp.asarray(box))
+
+
+def single_domain_state(model: DPModel, coords, box, nbr_capacity: int,
+                        skin: float):
+    """Single-rank assembly phase: a full skin-widened neighbor list
+    (``ref_positions`` inside doubles as the reuse reference)."""
+    from ..md.neighbors import brute_force_neighbor_list
+    return brute_force_neighbor_list(coords, jnp.asarray(box),
+                                     model.cfg.descriptor.rcut + skin,
+                                     nbr_capacity, half=False)
+
+
+def single_domain_forces_nlist(model: DPModel, params, coords, types, box,
+                               nlist):
+    """Single-rank evaluation phase: reuse a (possibly stale) skin-widened
+    list, re-filtered to the exact cutoff at the current positions."""
+    box = jnp.asarray(box)
+    rcut = model.cfg.descriptor.rcut
+    safe = jnp.where(nlist.idx >= 0, nlist.idx, 0)
+    dr = minimum_image(coords[safe] - coords[:, None, :], box)
+    mask = nlist.mask * ((dr ** 2).sum(-1) < rcut ** 2)
+    local = jnp.ones((coords.shape[0],), coords.dtype)
+    return model.energy_and_forces(params, coords, types, nlist.idx, mask,
+                                   local, box=box)

@@ -138,13 +138,18 @@ _ZERO_SHIFT = 13  # index of (0,0,0)
 
 
 def select_local(coords: jax.Array, grid: VirtualGrid, rank: jax.Array,
-                 capacity: int):
+                 capacity: int, valid=None):
     """Static-capacity selection of a rank's local atoms.
 
+    ``valid`` (N,) bool optionally excludes atoms (e.g. mesh-divisibility
+    padding) from residence — their parked coordinates would otherwise be
+    clipped into an edge rank by ``rank_of``.
     Returns (idx (C,), mask (C,), count ()) — idx padded with 0, masked.
     """
     n = coords.shape[0]
     member = grid.rank_of(coords) == rank
+    if valid is not None:
+        member &= valid
     score = jnp.where(member, -jnp.arange(n, dtype=jnp.float32), -jnp.inf)
     k = min(capacity, n)
     _, idx = jax.lax.top_k(score, k)
@@ -199,18 +204,22 @@ def select_ghosts(coords: jax.Array, box, grid: VirtualGrid, rank: jax.Array,
 # ---------------------------------------------------------------------------
 
 def bin_atoms(coords: jax.Array, box, dims: tuple[int, int, int],
-              capacity: int) -> cellmod.CellTable:
+              capacity: int, valid=None) -> cellmod.CellTable:
     """Bin the replicated coordinate buffer into a global periodic cell grid.
 
     Identical on every rank (runs on the post-all-gather buffer), so the
     table can be built once per step and shared by local+ghost selection.
+    ``valid`` (N,) bool routes excluded atoms (mesh-divisibility padding) to
+    the spill row so they never surface as candidates.
     """
     box = jnp.asarray(box)
     cw = box / jnp.asarray(dims, coords.dtype)
     frac = jnp.clip(jnp.floor(coords / cw).astype(jnp.int32),
                     0, jnp.asarray(dims, jnp.int32) - 1)
-    return cellmod.build_cell_table(cellmod.cell_ids_from_coords(frac, dims),
-                                    dims, capacity)
+    ids = cellmod.cell_ids_from_coords(frac, dims)
+    if valid is not None:
+        ids = cellmod.route_invalid(ids, valid, int(np.prod(dims)))
+    return cellmod.build_cell_table(ids, dims, capacity)
 
 
 def _region_cells(lo, hi, box, dims: tuple[int, int, int],
@@ -251,7 +260,7 @@ def _region_cells(lo, hi, box, dims: tuple[int, int, int],
 
 def select_local_cells(coords: jax.Array, grid: VirtualGrid, rank: jax.Array,
                        capacity: int, table: cellmod.CellTable,
-                       region: tuple[int, int, int], box):
+                       region: tuple[int, int, int], box, valid=None):
     """Cell-based :func:`select_local`: candidates come from the cells
     overlapping the subdomain instead of the full atom range.  Same returns,
     same ordering (ascending atom index), plus a region-overflow flag."""
@@ -265,6 +274,8 @@ def select_local_cells(coords: jax.Array, grid: VirtualGrid, rank: jax.Array,
     ids = jnp.where(cellmod.dedupe_mask(ids), ids, n_cells)
     cand = table.table[ids].reshape(-1)                    # (R * cap,)
     member = grid.rank_of(coords) == rank
+    if valid is not None:
+        member &= valid
     is_member = jnp.where(cand >= 0, member[jnp.clip(cand, 0)], False)
     score = jnp.where(is_member, -cand.astype(jnp.float32), -jnp.inf)
     k = min(capacity, cand.shape[0])

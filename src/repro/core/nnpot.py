@@ -5,6 +5,12 @@ inside GROMACS's NNPot module: it owns the DP model handle, performs the
 data-layout + unit conversions before inference, extracts the marked ("NN")
 atoms from the full position array, runs (optionally distributed) inference,
 and scatters the resulting forces back into engine layout.
+
+With a positive skin (``DDConfig.skin`` distributed, the ``skin`` argument
+single-domain) the provider exposes the amortized two-phase API the engine's
+fused scan loop drives — ``assemble`` / ``evaluate`` / ``needs_rebuild`` /
+``grow`` — mirroring how GROMACS amortizes pair-list construction over
+``nstlist`` steps.
 """
 from __future__ import annotations
 
@@ -17,7 +23,11 @@ import numpy as np
 from jax.sharding import Mesh
 
 from ..dp.model import DPModel
-from .ddinfer import DDConfig, make_distributed_force_fn, single_domain_forces
+from ..md.neighbors import needs_rebuild as _nlist_needs_rebuild
+from .ddinfer import (DDConfig, make_assembly_fn, make_displacement_check_fn,
+                      make_distributed_force_fn, make_evaluation_fn,
+                      single_domain_forces, single_domain_forces_nlist,
+                      single_domain_state)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,14 +59,22 @@ class DeepmdForceProvider:
     nn_indices are static (topology-time preprocessing marks the DP group);
     the provider is jit-transparent: calling it inside the engine's jitted
     step traces straight through shard_map when distributed.
-    """
+
+    ``skin`` (model length units; for the distributed path set
+    ``DDConfig.skin`` instead, e.g. via ``suggest_config(..., skin=...)``)
+    enables decomposition reuse: ``assemble`` builds a persistent state
+    (distributed: a :class:`repro.core.DDState`; single-domain: a
+    skin-widened full :class:`~repro.md.neighbors.NeighborList`) and
+    ``evaluate`` reuses it until ``needs_rebuild`` reports an atom moved
+    more than skin/2.  ``grow`` doubles the static capacities after an
+    overflow (the engine re-runs the affected window)."""
 
     def __init__(self, model: DPModel, params, nn_indices: np.ndarray,
                  types, box, n_atoms: int,
                  dd_config: Optional[DDConfig] = None,
                  mesh: Optional[Mesh] = None,
                  units: UnitConversion = UnitConversion(),
-                 nbr_capacity: int = 64):
+                 nbr_capacity: int = 64, skin: float = 0.0):
         self.model = model
         self.params = params
         self.nn_indices = jnp.asarray(np.asarray(nn_indices, np.int32))
@@ -69,24 +87,155 @@ class DeepmdForceProvider:
         self.box_model = box_model
         self.nn_types = nn_types
         self.dd_config = dd_config
+        self.mesh = mesh
         if dd_config is not None:
             assert mesh is not None, "distributed mode needs a mesh"
-            self._dist_fn = make_distributed_force_fn(
-                model, dd_config, mesh, box_model, self.n_nn)
+            self.skin = dd_config.skin
         else:
-            self._dist_fn = None
+            self.skin = skin
+            if skin > 0:
+                # widen the single-domain list capacity with the skin volume
+                rcut = model.cfg.descriptor.rcut
+                self.nbr_capacity = int(np.ceil(
+                    nbr_capacity * ((rcut + skin) / rcut) ** 3))
+        self._build_fns()
+        self._state = None
+        self.growths = 0
         self.last_diag: Optional[dict] = None
 
-    def __call__(self, positions: jax.Array, box: jax.Array):
-        """(energy kJ/mol, forces (N,3) kJ/mol/nm) with zeros off the group."""
+    def _build_fns(self) -> None:
+        """(Re)build the jitted distributed fns — called after ``grow``."""
+        if self.dd_config is not None:
+            self._dist_fn = make_distributed_force_fn(
+                self.model, self.dd_config, self.mesh, self.box_model,
+                self.n_nn)
+            self._asm_fn = make_assembly_fn(
+                self.model, self.dd_config, self.mesh, self.box_model,
+                self.n_nn)
+            self._eval_fn = make_evaluation_fn(
+                self.model, self.dd_config, self.mesh, self.box_model,
+                self.n_nn)
+            self._check_fn = make_displacement_check_fn(
+                self.dd_config, self.mesh, self.box_model, self.n_nn)
+        else:
+            self._dist_fn = None
+
+    # -- amortized two-phase API (engine scan loop) -------------------------
+
+    @property
+    def stateful(self) -> bool:
+        """True when the engine should drive the assemble/evaluate split."""
+        return self.skin > 0
+
+    def _to_model(self, positions: jax.Array) -> jax.Array:
         nn_pos = positions[self.nn_indices] * self.units.length_to_model
         # wrap into the model box (virtual DD expects wrapped coordinates)
-        nn_pos = jnp.mod(nn_pos, self.box_model)
+        return jnp.mod(nn_pos, self.box_model)
+
+    def assemble(self, positions: jax.Array):
+        """Assembly phase at the current positions -> reusable state."""
+        nn_pos = self._to_model(positions)
+        if self.dd_config is not None:
+            return self._asm_fn(nn_pos, self.nn_types)
+        return single_domain_state(self.model, nn_pos, self.box_model,
+                                   self.nbr_capacity, self.skin)
+
+    def state_overflow(self, state) -> jax.Array:
+        """() bool/int — static capacities were exceeded; state invalid."""
+        if self.dd_config is not None:
+            return state.overflow > 0
+        return state.overflow
+
+    def needs_rebuild(self, positions: jax.Array, state) -> jax.Array:
+        """() bool — some atom moved more than skin/2 since assembly (the
+        distributed path checks shard-locally and pmaxes across the mesh)."""
+        nn_pos = self._to_model(positions)
+        if self.dd_config is not None:
+            return self._check_fn(nn_pos, state)
+        return _nlist_needs_rebuild(state, nn_pos, self.box_model, self.skin)
+
+    def evaluate(self, positions: jax.Array, state):
+        """Evaluation phase: (energy, forces (N,3) engine units, flags).
+
+        ``flags["needs_rebuild"]`` is the skin displacement check evaluated
+        at these positions (free for the distributed path — the evaluation
+        already pmaxes the shard displacements), so callers evaluate first
+        and rebuild + re-evaluate only when it fires, instead of paying a
+        separate check dispatch every step."""
+        nn_pos = self._to_model(positions)
+        if self.dd_config is not None:
+            e, f_nn, diag = self._eval_fn(self.params, nn_pos, state)
+            flags = {"overflow": diag["overflow"] > 0,
+                     "needs_rebuild": diag["needs_rebuild"]}
+        else:
+            e, f_nn = single_domain_forces_nlist(
+                self.model, self.params, nn_pos, self.nn_types,
+                self.box_model, state)
+            flags = {"overflow": state.overflow,
+                     "needs_rebuild": _nlist_needs_rebuild(
+                         state, nn_pos, self.box_model, self.skin)}
+        e, forces = self._to_engine(e, f_nn, positions)
+        return e, forces, flags
+
+    def grow(self) -> None:
+        """Double the static capacities after an overflow (rare: triggers a
+        re-jit; the engine re-runs the affected window afterwards)."""
+        self.growths += 1
+        if self.dd_config is not None:
+            c = self.dd_config
+            self.dd_config = dataclasses.replace(
+                c, nbr_capacity=2 * c.nbr_capacity,
+                nbr_capacity_eval=2 * c.k_eval,
+                local_capacity=2 * c.local_capacity,
+                ghost_capacity=min(2 * c.ghost_capacity, 27 * self.n_nn),
+                cell_capacity=2 * c.cell_capacity,
+                subcell_capacity=2 * c.subcell_capacity)
+            self._build_fns()
+        else:
+            self.nbr_capacity *= 2
+        self._state = None
+
+    # -- eager / stateless entry point --------------------------------------
+
+    def _to_engine(self, e, f_nn, positions):
+        e = e * self.units.energy_to_engine
+        f_nn = f_nn * self.units.force_to_engine
+        forces = jnp.zeros((self.n_atoms, 3), positions.dtype)
+        forces = forces.at[self.nn_indices].set(f_nn.astype(positions.dtype))
+        return e.astype(positions.dtype), forces
+
+    def __call__(self, positions: jax.Array, box: jax.Array):
+        """(energy kJ/mol, forces (N,3) kJ/mol/nm) with zeros off the group.
+
+        Eager calls with a positive skin reuse the cached state across calls
+        (rebuilding when the displacement check trips); traced calls — and
+        skin = 0 — run the fused per-step pipeline.
+        """
+        traced = isinstance(positions, jax.core.Tracer)
+        if self.stateful and not traced:
+            if self._state is None:
+                self._state = self.assemble(positions)
+            e, forces, flags = self.evaluate(positions, self._state)
+            if bool(flags["needs_rebuild"]):
+                self._state = self.assemble(positions)
+                e, forces, flags = self.evaluate(positions, self._state)
+            for _ in range(8):
+                # capacity overflow (assembly or k_eval trim) would silently
+                # truncate forces: grow and recompute until the state fits
+                if not bool(flags["overflow"]):
+                    break
+                self.grow()
+                self._state = self.assemble(positions)
+                e, forces, flags = self.evaluate(positions, self._state)
+            else:
+                raise RuntimeError("special-force capacity still exceeded "
+                                   "after 8 doublings")
+            self.last_diag = {k: bool(v) for k, v in flags.items()}
+            return e, forces
+        nn_pos = self._to_model(positions)
         if self._dist_fn is not None:
             e, f_nn, diag = self._dist_fn(self.params, nn_pos, self.nn_types)
-            if f_nn.shape[0] != self.n_nn:  # reduce_scatter path: re-gather
-                f_nn = f_nn.reshape(-1, 3)[: self.n_nn]
-            if not isinstance(e, jax.core.Tracer):
+            if not traced:
                 # only observable when called eagerly; inside a jitted MD
                 # step the diag values are tracers and must not leak
                 self.last_diag = diag
@@ -94,8 +243,4 @@ class DeepmdForceProvider:
             e, f_nn = single_domain_forces(
                 self.model, self.params, nn_pos, self.nn_types,
                 self.box_model, self.nbr_capacity)
-        e = e * self.units.energy_to_engine
-        f_nn = f_nn * self.units.force_to_engine
-        forces = jnp.zeros((self.n_atoms, 3), positions.dtype)
-        forces = forces.at[self.nn_indices].set(f_nn.astype(positions.dtype))
-        return e.astype(positions.dtype), forces
+        return self._to_engine(e, f_nn, positions)

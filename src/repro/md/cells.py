@@ -98,6 +98,15 @@ def build_cell_table(cell_ids: jax.Array, dims: tuple[int, int, int],
     return CellTable(table=table, counts=counts, overflow=overflow, dims=dims)
 
 
+def route_invalid(ids: jax.Array, valid: jax.Array,
+                  n_cells: int) -> jax.Array:
+    """Send entries with ``valid == False`` to the spill row ``n_cells``.
+
+    Shared by every caller that bins a buffer containing padded / parked /
+    out-of-range atoms: spilled entries never reappear as candidates."""
+    return jnp.where(valid, ids, n_cells)
+
+
 def dedupe_mask(ids: jax.Array) -> jax.Array:
     """Mask marking the first occurrence of each value in a small 1-D array."""
     m = ids[:, None] == ids[None, :]

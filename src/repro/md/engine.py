@@ -6,6 +6,27 @@ evaluation, (6) special force (NNPot), (7) force reduction + update,
 (8) output.  Stages (2), (3) and the NN part of (6) live in
 ``repro.core`` when running distributed; this module owns the host loop,
 the classical interactions, and checkpoint/restart fault tolerance.
+
+Two host-loop modes (``EngineConfig.loop_mode``):
+
+``"scan"`` (default)
+    The inner window between rebuild/observe/checkpoint boundaries runs as
+    a *single* jitted ``lax.scan`` — classical forces, the (optionally
+    distributed) DP evaluation, integrator and thermostat all fused, with
+    displacement-triggered neighbor/decomposition rebuilds folded in as
+    ``lax.cond`` branches.  The host only syncs at window boundaries,
+    removing the per-step ``block_until_ready`` that made every step a
+    global sync point (the paper's Fig. 6 bottleneck).
+
+``"step"``
+    One host round-trip per step with the neighbor / classical / special /
+    integrate stages timed separately — the paper-Fig.-9-style overhead
+    decomposition (see ``benchmarks/fig9_overhead.py``).
+
+Mid-run capacity overflow no longer kills the trajectory: the engine
+rebuilds on the host with doubled capacity (re-jitting only on the rare
+growth event), re-runs the affected window from its saved start state, and
+surfaces the growth in ``MDEngine.diagnostics``.
 """
 from __future__ import annotations
 
@@ -41,11 +62,13 @@ class EngineConfig:
     thermostat_tau: float = 0.5
     checkpoint_every: int = 0          # steps; 0 = off
     checkpoint_path: Optional[str] = None
+    loop_mode: str = "scan"            # "scan" (fused windows) | "step"
+    max_capacity_growths: int = 6      # doublings before giving up
     ff: ForceFieldConfig = dataclasses.field(default_factory=ForceFieldConfig)
 
 
 class MDEngine:
-    """Host-side driver around a fully jitted inner step.
+    """Host-side driver around fully jitted inner windows.
 
     Fault tolerance: ``checkpoint_every`` snapshots (positions, velocities,
     forces, step, rng) via ``repro.ckpt``; ``MDEngine.restore`` resumes a run
@@ -59,37 +82,115 @@ class MDEngine:
         self.system = system
         self.config = config
         self.special_force = special_force
-        self._step_fn = self._build_step()
+        self._stateful = bool(getattr(special_force, "stateful", False))
+        self._cell_cap_scale = 1.0
+        self._build_fns()
+        self._window_cache: dict[int, Callable] = {}
         self.timings: dict[str, float] = {"classical": 0.0, "special": 0.0,
-                                          "integrate": 0.0, "neighbor": 0.0}
+                                          "integrate": 0.0, "neighbor": 0.0,
+                                          "scan": 0.0}
+        self.diagnostics: dict = {"capacity_growths": [],
+                                  "special_growths": 0,
+                                  "displacement_rebuilds": 0,
+                                  "special_rebuilds": 0,
+                                  "cadence_rebuilds": 0,
+                                  "window_reruns": 0}
 
     # -- construction ------------------------------------------------------
 
-    def _build_step(self):
+    def _build_fns(self):
         cfg = self.config
         system = self.system
-        special = self.special_force
 
-        def classical_force_fn(pos, nlist):
+        def classical_fn(pos, nlist):
             e, g = jax.value_and_grad(classical_energy)(
                 pos, system, nlist, cfg.ff, True)
             return e, -g
 
-        @jax.jit
-        def step(state: MDState, nlist: NeighborList):
-            e_cl, f = classical_force_fn(state.positions, nlist)
-            e_sp = jnp.zeros((), f.dtype)
-            if special is not None:
-                e_sp, f_sp = special(state.positions, system.box)
-                f = f + f_sp
+        def integrate_fn(state: MDState, f):
             new = leapfrog_step(state, f, system.masses, system.box, cfg.dt)
             if cfg.thermostat_t is not None:
                 v = berendsen_rescale(new.velocities, system.masses,
-                                      cfg.thermostat_t, cfg.dt, cfg.thermostat_tau)
+                                      cfg.thermostat_t, cfg.dt,
+                                      cfg.thermostat_tau)
                 new = dataclasses.replace(new, velocities=v)
-            return new, (e_cl, e_sp)
+            return new
 
-        return step
+        self._classical_fn = jax.jit(classical_fn)
+        self._integrate_fn = jax.jit(integrate_fn)
+
+    def _step_parts(self, state: MDState, nlist: NeighborList, sp_state):
+        """One step from already-valid lists: the shared scan/step core.
+
+        Returns (new_state, nlist_out, sp_state_out, e_cl, e_sp, sp_ovf).
+        Traceable: rebuilds inside are data-dependent ``lax.cond`` branches.
+        """
+        cfg = self.config
+        system = self.system
+        special = self.special_force
+
+        rb = needs_rebuild(nlist, state.positions, system.box, cfg.skin)
+        nlist = jax.lax.cond(rb, lambda p, nl: self.build_nlist(p),
+                             lambda p, nl: nl, state.positions, nlist)
+        e_cl, f = self._classical_fn(state.positions, nlist)
+        e_sp = jnp.zeros((), f.dtype)
+        sp_rb = jnp.zeros((), bool)
+        sp_ovf = jnp.zeros((), bool)
+        if special is not None:
+            if self._stateful:
+                # evaluate first: the displacement check comes out of the
+                # evaluation's own diagnostics, so the common (no-rebuild)
+                # step pays no separate check dispatch.  When it fires, the
+                # stale result is discarded: rebuild and re-evaluate.
+                e_sp, f_sp, fl = special.evaluate(state.positions, sp_state)
+                sp_rb = fl["needs_rebuild"]
+
+                def rebuilt(p, s):
+                    s2 = special.assemble(p)
+                    e2, f2, fl2 = special.evaluate(p, s2)
+                    return s2, e2, f2, fl2["overflow"]
+
+                def kept(p, s):
+                    return s, e_sp, f_sp, fl["overflow"]
+
+                sp_state, e_sp, f_sp, sp_ovf = jax.lax.cond(
+                    sp_rb, rebuilt, kept, state.positions, sp_state)
+            else:
+                e_sp, f_sp = special(state.positions, system.box)
+            f = f + f_sp
+        new = self._integrate_fn(state, f)
+        return new, nlist, sp_state, e_cl, e_sp, rb, sp_rb, sp_ovf
+
+    def _window_fn(self, k: int) -> Callable:
+        """Jitted ``lax.scan`` over ``k`` fused steps (cached per length)."""
+        if k in self._window_cache:
+            return self._window_cache[k]
+
+        def body(carry, _):
+            state, nlist, sp_state, flags, _, _ = carry
+            (state, nlist, sp_state, e_cl, e_sp, rb, sp_rb,
+             sp_ovf) = self._step_parts(state, nlist, sp_state)
+            flags = {
+                "rebuilds": flags["rebuilds"] + rb.astype(jnp.int32),
+                "sp_rebuilds": flags["sp_rebuilds"] + sp_rb.astype(jnp.int32),
+                "nlist_overflow": flags["nlist_overflow"] | nlist.overflow,
+                "sp_overflow": flags["sp_overflow"] | sp_ovf,
+            }
+            return (state, nlist, sp_state, flags, e_cl, e_sp), None
+
+        def run_window(state, nlist, sp_state):
+            flags = {"rebuilds": jnp.zeros((), jnp.int32),
+                     "sp_rebuilds": jnp.zeros((), jnp.int32),
+                     "nlist_overflow": jnp.zeros((), bool),
+                     "sp_overflow": jnp.zeros((), bool)}
+            zero = jnp.zeros(())
+            carry = (state, nlist, sp_state, flags, zero, zero)
+            carry, _ = jax.lax.scan(body, carry, None, length=k)
+            return carry
+
+        fn = jax.jit(run_window)
+        self._window_cache[k] = fn
+        return fn
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -106,31 +207,186 @@ class MDEngine:
         cfg = self.config
         return build_neighbor_list(positions, self.system.box, cfg.cutoff,
                                    cfg.neighbor_capacity, half=True,
-                                   skin=cfg.skin)
+                                   skin=cfg.skin,
+                                   cell_cap_scale=self._cell_cap_scale)
+
+    # -- capacity growth (mid-run overflow no longer kills the run) --------
+
+    def _grow_neighbor_capacity(self) -> None:
+        cfg = self.config
+        if len(self.diagnostics["capacity_growths"]) >= cfg.max_capacity_growths:
+            raise RuntimeError(
+                "neighbor capacity still exceeded after "
+                f"{cfg.max_capacity_growths} doublings")
+        cfg.neighbor_capacity *= 2
+        self._cell_cap_scale *= 2.0  # cell occupancy can be the overflow too
+        self.diagnostics["capacity_growths"].append(cfg.neighbor_capacity)
+        self._window_cache.clear()   # windows close over the old capacity
+
+    def _build_nlist_grown(self, positions) -> NeighborList:
+        """Build the classical list, doubling capacity until it fits."""
+        while True:
+            nlist = self.build_nlist(positions)
+            if not bool(nlist.overflow):
+                return nlist
+            self._grow_neighbor_capacity()
+
+    def _assemble_special_grown(self, positions):
+        """Assemble the special-force state, growing its capacities on
+        overflow (rare re-jit; surfaced in diagnostics)."""
+        special = self.special_force
+        for _ in range(self.config.max_capacity_growths + 1):
+            sp_state = special.assemble(positions)
+            if not bool(special.state_overflow(sp_state)):
+                return sp_state
+            special.grow()
+            self.diagnostics["special_growths"] += 1
+            self._window_cache.clear()
+        raise RuntimeError("special-force capacity still exceeded after "
+                           f"{self.config.max_capacity_growths} doublings")
+
+    # -- main loop ---------------------------------------------------------
+
+    def _segment_len(self, i: int, abs_step: int, n_steps: int,
+                     observing: bool, observe_every: int) -> int:
+        """Steps until the next host boundary (rebuild cadence, observe,
+        checkpoint, or end of run), counting from relative step ``i``."""
+        cfg = self.config
+        ends = [n_steps]
+        re = cfg.rebuild_every
+        ends.append((i // re + 1) * re)
+        if observing:
+            # observation happens after relative steps 1, 1+obs, 1+2*obs, ...
+            ends.append(i + 1 if i % observe_every == 0
+                        else ((i - 1) // observe_every + 1) * observe_every + 1)
+        if cfg.checkpoint_every and cfg.checkpoint_path:
+            # abs_step is the absolute step count at relative step i
+            ce = cfg.checkpoint_every
+            ends.append(i + (-abs_step - 1) % ce + 1)
+        return max(1, min(e for e in ends if e > i) - i)
+
+    def _run_segment_scan(self, state, nlist, sp_state, k: int):
+        """One fused window, re-run from its start on capacity overflow."""
+        start = (state, nlist, sp_state)
+        while True:
+            t0 = time.perf_counter()
+            (state, nlist, sp_state, flags, e_cl,
+             e_sp) = self._window_fn(k)(*start)
+            jax.block_until_ready(state.positions)
+            self.timings["scan"] += time.perf_counter() - t0
+            nlist_ovf = bool(flags["nlist_overflow"])
+            sp_ovf = bool(flags["sp_overflow"])
+            if not nlist_ovf and not sp_ovf:
+                self.diagnostics["displacement_rebuilds"] += int(flags["rebuilds"])
+                self.diagnostics["special_rebuilds"] += int(flags["sp_rebuilds"])
+                return state, nlist, sp_state, e_cl, e_sp
+            # grow whichever capacity overflowed, restore the window's start
+            # state, and replay the window — correctness over throughput on
+            # the rare growth event
+            self.diagnostics["window_reruns"] += 1
+            state0, nlist0, sp_state0 = start
+            if nlist_ovf:
+                self._grow_neighbor_capacity()
+                nlist0 = self._build_nlist_grown(state0.positions)
+            if self._stateful and sp_ovf:
+                self.special_force.grow()
+                self.diagnostics["special_growths"] += 1
+                self._window_cache.clear()
+                sp_state0 = self._assemble_special_grown(state0.positions)
+            start = (state0, nlist0, sp_state0)
+
+    def _run_segment_step(self, state, nlist, sp_state, k: int):
+        """Per-step host loop with the Fig.-9 stage timers split out."""
+        cfg = self.config
+        system = self.system
+        special = self.special_force
+        e_cl = e_sp = jnp.zeros(())
+        for _ in range(k):
+            t0 = time.perf_counter()
+            if bool(needs_rebuild(nlist, state.positions, system.box,
+                                  cfg.skin)):
+                nlist = self._build_nlist_grown(state.positions)
+                self.diagnostics["displacement_rebuilds"] += 1
+            jax.block_until_ready(nlist.idx)
+            self.timings["neighbor"] += time.perf_counter() - t0
+
+            t0 = time.perf_counter()
+            e_cl, f = self._classical_fn(state.positions, nlist)
+            jax.block_until_ready(f)
+            self.timings["classical"] += time.perf_counter() - t0
+
+            if special is not None:
+                t0 = time.perf_counter()
+                if self._stateful:
+                    e_sp, f_sp, fl = special.evaluate(state.positions,
+                                                      sp_state)
+                    if bool(fl["needs_rebuild"]):
+                        sp_state = self._assemble_special_grown(
+                            state.positions)
+                        self.diagnostics["special_rebuilds"] += 1
+                        e_sp, f_sp, fl = special.evaluate(state.positions,
+                                                          sp_state)
+                    while bool(fl["overflow"]):
+                        # evaluation-side overflow (e.g. k_eval trim): grow
+                        # and recompute — mirrors the scan path's replay
+                        special.grow()
+                        self.diagnostics["special_growths"] += 1
+                        self._window_cache.clear()
+                        if self.diagnostics["special_growths"] > (
+                                cfg.max_capacity_growths):
+                            raise RuntimeError(
+                                "special-force capacity still exceeded "
+                                f"after {cfg.max_capacity_growths} doublings")
+                        sp_state = self._assemble_special_grown(
+                            state.positions)
+                        e_sp, f_sp, fl = special.evaluate(state.positions,
+                                                          sp_state)
+                else:
+                    e_sp, f_sp = special(state.positions, system.box)
+                f = f + f_sp
+                jax.block_until_ready(f)
+                self.timings["special"] += time.perf_counter() - t0
+
+            t0 = time.perf_counter()
+            state = self._integrate_fn(state, f)
+            jax.block_until_ready(state.positions)
+            self.timings["integrate"] += time.perf_counter() - t0
+        return state, nlist, sp_state, e_cl, e_sp
 
     def run(self, state: MDState, n_steps: int,
             observe: Optional[Callable[[MDState, dict], None]] = None,
             observe_every: int = 10) -> MDState:
         cfg = self.config
-        nlist = self.build_nlist(state.positions)
-        if bool(nlist.overflow):
-            raise RuntimeError("neighbor capacity exceeded at init; raise "
-                               "EngineConfig.neighbor_capacity")
-        for i in range(n_steps):
-            t0 = time.perf_counter()
-            if i % cfg.rebuild_every == 0 or bool(
-                    needs_rebuild(nlist, state.positions, self.system.box, cfg.skin)):
-                nlist = self.build_nlist(state.positions)
-                if bool(nlist.overflow):
-                    raise RuntimeError("neighbor capacity exceeded mid-run")
-            self.timings["neighbor"] += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        nlist = self._build_nlist_grown(state.positions)
+        sp_state = None
+        if self._stateful:
+            sp_state = self._assemble_special_grown(state.positions)
+        self.timings["neighbor"] += time.perf_counter() - t0
 
-            t0 = time.perf_counter()
-            state, (e_cl, e_sp) = self._step_fn(state, nlist)
-            jax.block_until_ready(state.positions)
-            self.timings["classical"] += time.perf_counter() - t0
+        i = 0
+        while i < n_steps:
+            if i > 0 and i % cfg.rebuild_every == 0:
+                # cadence rebuild on the host (the redundant step-0 rebuild
+                # right after the pre-loop build is skipped)
+                t0 = time.perf_counter()
+                nlist = self._build_nlist_grown(state.positions)
+                if self._stateful:
+                    sp_state = self._assemble_special_grown(state.positions)
+                self.diagnostics["cadence_rebuilds"] += 1
+                self.timings["neighbor"] += time.perf_counter() - t0
 
-            if observe is not None and i % observe_every == 0:
+            k = self._segment_len(i, int(state.step), n_steps,
+                                  observe is not None, observe_every)
+            if cfg.loop_mode == "step":
+                state, nlist, sp_state, e_cl, e_sp = self._run_segment_step(
+                    state, nlist, sp_state, k)
+            else:
+                state, nlist, sp_state, e_cl, e_sp = self._run_segment_scan(
+                    state, nlist, sp_state, k)
+            i += k
+
+            if observe is not None and (i - 1) % observe_every == 0:
                 obs = {
                     "step": int(state.step),
                     "e_classical": float(e_cl),

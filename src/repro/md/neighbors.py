@@ -112,22 +112,37 @@ def cell_list_neighbor_list(pos: jax.Array, box: jax.Array, cutoff: float,
 
 
 def build_neighbor_list(pos: jax.Array, box, cutoff: float, capacity: int,
-                        half: bool = False, skin: float = 0.0) -> NeighborList:
-    """Front door: picks cell list when the box admits >= 3 cells per axis."""
+                        half: bool = False, skin: float = 0.0,
+                        cell_cap_scale: float = 1.0) -> NeighborList:
+    """Front door: picks cell list when the box admits >= 3 cells per axis.
+
+    ``cell_cap_scale`` scales the density-derived per-cell capacity — the
+    engine doubles it alongside ``capacity`` on overflow growth so clustered
+    systems whose *cell* occupancy (not neighbor count) overflows also
+    converge instead of looping."""
     box = jnp.asarray(box)
     r = cutoff + skin
     grid = _cell_grid(np.asarray(box), r)
     if min(grid) >= 3:
         n = pos.shape[0]
         density = n / float(np.prod(np.asarray(box)))
-        cell_cap = int(max(8, 2.5 * density * r ** 3 + 8))
+        cell_cap = int(cell_cap_scale * max(8, 2.5 * density * r ** 3 + 8))
         return cell_list_neighbor_list(pos, box, r, capacity, grid, cell_cap, half)
     return brute_force_neighbor_list(pos, box, r, capacity, half)
+
+
+def max_displacement2(pos: jax.Array, ref: jax.Array,
+                      box: jax.Array) -> jax.Array:
+    """Max squared minimum-image displacement since ``ref`` — the Verlet-skin
+    rebuild criterion, shared with the virtual-DD reuse check
+    (:mod:`repro.core.ddinfer`)."""
+    dr = minimum_image(pos - ref, box)
+    return (dr ** 2).sum(-1).max()
 
 
 @jax.jit
 def needs_rebuild(nlist: NeighborList, pos: jax.Array, box: jax.Array,
                   skin: float) -> jax.Array:
     """True when an atom moved > skin/2 since the list was built."""
-    dr = minimum_image(pos - nlist.ref_positions, box)
-    return ((dr ** 2).sum(-1).max() > (0.5 * skin) ** 2) | nlist.overflow
+    disp2 = max_displacement2(pos, nlist.ref_positions, box)
+    return (disp2 > (0.5 * skin) ** 2) | nlist.overflow

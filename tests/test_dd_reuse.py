@@ -1,0 +1,231 @@
+"""Amortized decomposition (DDState reuse) acceptance properties:
+
+* evaluation reusing a stale skin-widened state is bitwise-equal to a fresh
+  assembly at the drifted positions (while no selection set changes), and
+  matches the single-domain reference to fp tolerance anywhere inside the
+  skin/2 bound;
+* the psum'd displacement check stays quiet inside the bound, trips beyond
+  it, and a rebuild restores parity;
+* the fused per-step path is bitwise-equal to assemble+evaluate;
+* the atom-axis padding makes ``reduce_scatter`` (and ``all_reduce``) work
+  when n_atoms is not divisible by the mesh size.
+
+Multi-device execution requires forced host devices, so these run in a
+subprocess (tests proper must see one device)."""
+import json
+
+import pytest
+
+from conftest import run_in_subprocess
+
+_DD_REUSE_CODE = r"""
+import dataclasses, json
+import jax, jax.numpy as jnp, numpy as np
+from repro.dp import DPModel, paper_dpa1_config
+from repro.core import (suggest_config, make_distributed_force_fn,
+                        make_assembly_fn, make_evaluation_fn,
+                        make_displacement_check_fn, single_domain_forces)
+from repro.launch.mesh import make_dd_mesh
+
+rng = np.random.default_rng(7)
+n = 160
+L = 3.5
+box = np.array([L] * 3, np.float32)
+ch = rng.uniform(0, L, (n, 3)).astype(np.float32)
+coords = jnp.asarray(ch)
+types = jnp.asarray(rng.integers(0, 4, n), jnp.int32)
+model = DPModel(paper_dpa1_config(ntypes=4, rcut=0.6, sel=48))
+params = model.init_params(jax.random.PRNGKey(0))
+mesh = make_dd_mesh(8)
+out = {}
+SKIN = 0.05
+cfg = suggest_config(n, box, 8, 0.6, nbr_capacity=64, slack=2.5, skin=SKIN,
+                     coords=ch)
+asm = make_assembly_fn(model, cfg, mesh, box, n)
+ev = make_evaluation_fn(model, cfg, mesh, box, n)
+chk = make_displacement_check_fn(cfg, mesh, box, n)
+st = asm(coords, types)
+out["asm_overflow"] = int(st.overflow)
+
+# fused per-step path == fresh assemble+evaluate, bitwise
+ffn = make_distributed_force_fn(model, cfg, mesh, box, n)
+e0, f0, _ = ev(params, coords, st)
+e1, f1, _ = ffn(params, coords, types)
+out["fused_eval_bitwise"] = bool((f0 == f1).all()) and float(e0) == float(e1)
+
+# tiny in-bound drift, atoms near selection-critical boundaries frozen so
+# the local/ghost sets cannot flip: reuse must be bitwise-equal to a fresh
+# assembly (the within-cutoff pair set is canonicalized by compaction)
+halo_eff = cfg.halo_eff
+crit = np.concatenate([(np.array([0.0, L / 2]) + d) % L
+                       for d in (0.0, halo_eff, -halo_eff)])
+frozen = np.zeros(n, bool)
+for a in range(3):
+    d = np.abs(ch[:, a][:, None] - crit[None, :])
+    d = np.minimum(d, L - d)
+    frozen |= (d < 1e-3).any(1)
+step = rng.uniform(-2e-4, 2e-4, (n, 3))
+step[frozen] = 0.0
+c1 = jnp.asarray(np.mod(ch + step, box).astype(np.float32))
+e2, f2, d2 = ev(params, c1, st)             # stale state
+e3, f3, _ = ev(params, c1, asm(c1, types))  # fresh state
+out["reuse_bitwise"] = bool((f2 == f3).all()) and float(e2) == float(e3)
+out["reuse_needs_rebuild"] = bool(d2["needs_rebuild"])
+e_sd, f_sd = single_domain_forces(model, params, c1, types, box, 64)
+out["reuse_df_single"] = float(jnp.abs(f2 - f_sd).max())
+
+# larger drift, still inside skin/2: stale state still exact to fp tolerance
+c2 = jnp.asarray(np.mod(
+    ch + rng.uniform(-1, 1, (n, 3)) * (0.4 * SKIN / 2) / np.sqrt(3),
+    box).astype(np.float32))
+out["chk_quiet_inside"] = bool(chk(c2, st))
+e4, f4, d4 = ev(params, c2, st)
+e_sd2, f_sd2 = single_domain_forces(model, params, c2, types, box, 64)
+out["inbound_df_single"] = float(jnp.abs(f4 - f_sd2).max())
+out["inbound_needs_rebuild"] = bool(d4["needs_rebuild"])
+
+# beyond skin/2: the check trips; rebuilding restores parity
+c3 = jnp.asarray(np.mod(ch + rng.normal(0, 0.08, (n, 3)),
+                        box).astype(np.float32))
+out["chk_trips"] = bool(chk(c3, st))
+st3 = asm(c3, types)
+e5, f5, _ = ev(params, c3, st3)
+e_sd3, f_sd3 = single_domain_forces(model, params, c3, types, box, 64)
+out["rebuilt_df_single"] = float(jnp.abs(f5 - f_sd3).max())
+
+# ghost_reduce force mode: same reuse contract
+cfg_gr = suggest_config(n, box, 8, 0.6, nbr_capacity=64, slack=2.5,
+                        skin=SKIN, force_mode="ghost_reduce", coords=ch)
+asm_gr = make_assembly_fn(model, cfg_gr, mesh, box, n)
+ev_gr = make_evaluation_fn(model, cfg_gr, mesh, box, n)
+st_gr = asm_gr(coords, types)
+e6, f6, _ = ev_gr(params, c1, st_gr)
+e7, f7, _ = ev_gr(params, c1, asm_gr(c1, types))
+out["gr_reuse_bitwise"] = bool((f6 == f7).all())
+out["gr_reuse_df_single"] = float(jnp.abs(f6 - f_sd).max())
+
+# atom axis not divisible by the mesh: padding satellite (both reduce modes)
+n2 = 157
+c4 = jnp.asarray(rng.uniform(0, L, (n2, 3)).astype(np.float32))
+t4 = jnp.asarray(rng.integers(0, 4, n2), jnp.int32)
+e_r, f_r = single_domain_forces(model, params, c4, t4, box, 64)
+for mode in ["all_reduce", "reduce_scatter"]:
+    cfg2 = dataclasses.replace(
+        suggest_config(n2, box, 8, 0.6, nbr_capacity=64, slack=2.5),
+        reduce_mode=mode)
+    fn2 = make_distributed_force_fn(model, cfg2, mesh, box, n2)
+    e8, f8, d8 = fn2(params, c4, t4)
+    out["pad_" + mode] = {
+        "shape_ok": list(f8.shape) == [n2, 3],
+        "de": abs(float(e8 - e_r)) / abs(float(e_r)),
+        "df": float(jnp.abs(f8 - f_r).max()),
+        "overflow": int(d8["overflow"]),
+    }
+print("JSON" + json.dumps(out))
+"""
+
+
+_ENGINE_DD_CODE = r"""
+import json
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import DeepmdForceProvider, suggest_config
+from repro.dp import DPModel, paper_dpa1_config
+from repro.launch.mesh import make_dd_mesh
+from repro.md import (EngineConfig, MDEngine, build_solvated_protein,
+                      mark_nn_group)
+
+system, pos, nn_idx = build_solvated_protein(6, water_per_protein_atom=1.5)
+system = mark_nn_group(system, nn_idx)
+model = DPModel(paper_dpa1_config(ntypes=4, rcut=0.6, sel=32))
+params = model.init_params(jax.random.PRNGKey(0))
+mesh = make_dd_mesh(8)
+out = {}
+runs = {}
+for mode in ["scan", "step"]:
+    # ghost_reduce: the protein box is too small for the 2*r_c + 2*skin
+    # owner_full halo; the 1-hop halo also exercises the other force mode
+    dd = suggest_config(len(nn_idx), np.asarray(system.box), 8, 0.6,
+                        nbr_capacity=48, slack=2.5, skin=0.04,
+                        force_mode="ghost_reduce",
+                        coords=np.asarray(pos)[np.asarray(nn_idx)])
+    prov = DeepmdForceProvider(model, params, nn_idx, system.types,
+                               system.box, system.n_atoms, dd_config=dd,
+                               mesh=mesh)
+    assert prov.stateful
+    eng = MDEngine(system, EngineConfig(cutoff=0.9, neighbor_capacity=96,
+                                        dt=0.0005, thermostat_t=200.0,
+                                        loop_mode=mode), special_force=prov)
+    runs[mode] = (eng.run(eng.init_state(pos, 200.0), 8), eng)
+st_s, eng_s = runs["scan"]
+st_p, eng_p = runs["step"]
+out["finite"] = bool(jnp.isfinite(st_s.positions).all())
+out["steps"] = [int(st_s.step), int(st_p.step)]
+out["max_dx"] = float(jnp.abs(st_s.positions - st_p.positions).max())
+out["scan_diag"] = {k: v for k, v in eng_s.diagnostics.items()
+                    if k != "capacity_growths"}
+print("JSON" + json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def reuse_results():
+    stdout = run_in_subprocess(_DD_REUSE_CODE, n_devices=8)
+    line = [l for l in stdout.splitlines() if l.startswith("JSON")][0]
+    return json.loads(line[4:])
+
+
+def test_reuse_bitwise_parity(reuse_results):
+    """Stale-state evaluation == fresh assembly, bitwise, while no atom
+    crosses a selection boundary (acceptance criterion)."""
+    r = reuse_results
+    assert r["asm_overflow"] == 0
+    assert not r["reuse_needs_rebuild"]
+    assert r["reuse_bitwise"]
+    assert r["gr_reuse_bitwise"]
+
+
+def test_reuse_correct_inside_skin_bound(reuse_results):
+    """Anywhere inside skin/2 the stale state is still exact (tolerance vs
+    the single-domain oracle), and the check stays quiet."""
+    r = reuse_results
+    assert not r["chk_quiet_inside"]
+    assert not r["inbound_needs_rebuild"]
+    assert r["reuse_df_single"] < 1e-4
+    assert r["inbound_df_single"] < 1e-4
+    assert r["gr_reuse_df_single"] < 1e-4
+
+
+def test_rebuild_triggered_and_correct(reuse_results):
+    """Beyond skin/2 the psum'd displacement check trips and a rebuild
+    restores single-domain parity."""
+    r = reuse_results
+    assert r["chk_trips"]
+    assert r["rebuilt_df_single"] < 1e-4
+
+
+def test_fused_path_is_assemble_plus_evaluate(reuse_results):
+    assert reuse_results["fused_eval_bitwise"]
+
+
+@pytest.mark.parametrize("mode", ["all_reduce", "reduce_scatter"])
+def test_padding_non_divisible_mesh(reuse_results, mode):
+    """n_atoms % n_ranks != 0 works in both reduce modes (the
+    ``psum_scatter(tiled=True)`` divisibility satellite)."""
+    r = reuse_results["pad_" + mode]
+    assert r["shape_ok"]
+    assert r["overflow"] == 0
+    assert r["de"] < 1e-5, r
+    assert r["df"] < 1e-4, r
+
+
+@pytest.mark.slow
+def test_engine_scan_with_stateful_distributed_provider():
+    """Full integration: the engine's fused scan windows driving the
+    stateful (skin > 0) distributed provider on an 8-rank mesh reproduce
+    the per-step host loop."""
+    stdout = run_in_subprocess(_ENGINE_DD_CODE, n_devices=8)
+    line = [l for l in stdout.splitlines() if l.startswith("JSON")][0]
+    r = json.loads(line[4:])
+    assert r["finite"]
+    assert r["steps"] == [8, 8]
+    assert r["max_dx"] <= 1e-6, r
