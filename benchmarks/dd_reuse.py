@@ -32,7 +32,7 @@ import sys
 
 import numpy as np
 
-from .common import save_json, time_fn
+from .common import rerun_with_devices, save_json, time_fn
 
 DENSITY = 3.7          # atoms / nm^3 (water-ish NN-group density)
 RCUT = 0.6
@@ -82,30 +82,6 @@ def _parity_drift(coords: np.ndarray, box: np.ndarray, halo_eff: float,
     return np.mod(coords + step, box).astype(np.float32)
 
 
-def _run_in_subprocess(smoke: bool):
-    import os
-    import subprocess
-
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={N_RANKS}")
-    env["PYTHONPATH"] = os.pathsep.join(
-        [os.path.join(os.path.dirname(__file__), "..", "src")]
-        + ([env["PYTHONPATH"]] if "PYTHONPATH" in env else []))
-    cmd = [sys.executable, "-m", "benchmarks.dd_reuse"]
-    if smoke:
-        cmd.append("--smoke")
-    proc = subprocess.run(cmd, env=env, capture_output=True, text=True,
-                          timeout=1800,
-                          cwd=os.path.join(os.path.dirname(__file__), ".."))
-    assert proc.returncode == 0, proc.stderr[-2000:]
-    rows = []
-    for line in proc.stdout.splitlines():
-        parts = line.strip().split(",")
-        if len(parts) == 3 and parts[0].startswith("dd_reuse"):
-            rows.append((parts[0], float(parts[1]), parts[2]))
-    return rows
-
-
 def run(smoke: bool = False):
     import jax
     import jax.numpy as jnp
@@ -118,7 +94,8 @@ def run(smoke: bool = False):
     if len(jax.devices()) < N_RANKS:
         # jax is already initialized single-device (benchmark harness):
         # re-exec in a subprocess with forced host devices
-        return _run_in_subprocess(smoke)
+        return rerun_with_devices("benchmarks.dd_reuse", N_RANKS, "dd_reuse",
+                                  smoke=smoke, timeout=1800)
 
     n = 512 if smoke else 4096
     boxl = float((n / DENSITY) ** (1.0 / 3.0))

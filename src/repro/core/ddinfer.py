@@ -40,9 +40,10 @@ from ..dp.model import DPModel
 from ..kernels.ops import cell_filter_op
 from ..md import cells as cellmod
 from ..md.neighbors import max_displacement2, minimum_image
-from .domain import (IMAGE_SHIFTS, VirtualGrid, balanced_planes, bin_atoms,
-                     factor_grid, select_ghosts, select_ghosts_cells,
-                     select_local, select_local_cells, uniform_grid)
+from .domain import (IMAGE_SHIFTS, VirtualGrid, atom_costs, balanced_planes,
+                     bin_atoms, factor_grid, select_ghosts,
+                     select_ghosts_cells, select_local, select_local_cells,
+                     uniform_grid)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,6 +56,9 @@ class DDConfig:
     nbr_capacity: int            # K for the DP neighbor lists
     halo: float                  # 2*r_c (owner_full) or r_c (ghost_reduce)
     balanced: bool = False       # quantile load balancing (beyond paper)
+    rebalance: bool = False      # feedback balancing: planes from measured
+    #   per-atom Eq.-8 costs (atom_costs under a provisional grid) instead of
+    #   plain coordinate quantiles; re-derived at every assembly/rebuild
     reduce_mode: str = "all_reduce"  # "all_reduce" (paper) | "reduce_scatter"
     force_mode: str = "owner_full"   # paper: owner computes full local forces
     #   "owner_full"  : 2*r_c halo, no ghost-force reduction (paper Sec. IV-A)
@@ -153,18 +157,39 @@ class DDState:
     nbr_mask: jax.Array    # (P*C, K) float {0,1}
     local_count: jax.Array  # () int32, psum'd over ranks
     ghost_count: jax.Array  # () int32, psum'd over ranks
+    cost_max: jax.Array    # () int32, pmax'd per-rank local+ghost count
     overflow: jax.Array    # () int32, psum'd over ranks; != 0 => invalid
     ref: jax.Array         # (n_pad, 3) reference positions at build time
 
 
-def _max_rank_counts(coords, box, dims: tuple[int, int, int], halo: float,
-                     balanced: bool) -> tuple[int, int]:
+def _build_grid(coords, box, dims: tuple[int, int, int], halo_eff: float,
+                balanced: bool, rebalance: bool) -> VirtualGrid:
+    """The decomposition planes for a configuration.
+
+    Shared by the runtime (:func:`_make_grid`) and by
+    :func:`suggest_config`'s capacity sizing — the sizing must count atoms
+    under the *same* planes the runtime will actually produce, or the
+    "exact initial-configuration maxima" contract breaks (cost-weighted
+    planes can concentrate more atoms on a rank than count quantiles do).
+    """
+    if rebalance:
+        # feedback balancing: measure the Eq.-8 cost each atom induces under
+        # a provisional grid (halo multiplicity included), then equalize the
+        # *cost* per slab — not just the coordinate population.
+        base = (balanced_planes(coords, box, dims) if balanced
+                else uniform_grid(box, dims))
+        w = atom_costs(coords, box, base, halo_eff)
+        return balanced_planes(coords, box, dims, weights=w)
+    if balanced:
+        return balanced_planes(coords, box, dims)
+    return uniform_grid(box, dims)
+
+
+def _max_rank_counts(coords, box, vgrid: VirtualGrid, halo: float,
+                     dims: tuple[int, int, int]) -> tuple[int, int]:
     """Exact (max local, max ghost) per-rank counts for a configuration —
     host-side, config time only (O(27 * N * P))."""
     coords_j = jnp.asarray(coords, jnp.float32)
-    box_j = jnp.asarray(np.asarray(box, np.float32))
-    vgrid = (balanced_planes(coords_j, box_j, dims) if balanced
-             else uniform_grid(box_j, dims))
     ranks = np.asarray(vgrid.rank_of(coords_j))
     p = int(np.prod(dims))
     loc_max = int(np.bincount(ranks, minlength=p).max())
@@ -209,7 +234,7 @@ def _max_shifted_cell_occupancy(coords, box, edge: float) -> int:
 
 def suggest_config(n_atoms: int, box, n_ranks: int, rcut: float,
                    nbr_capacity: int = 64, slack: float = 1.6,
-                   balanced: bool = False,
+                   balanced: bool = False, rebalance: bool = False,
                    force_mode: str = "owner_full",
                    nbr_method: str = "cells",
                    use_pallas: bool = False,
@@ -246,18 +271,23 @@ def suggest_config(n_atoms: int, box, n_ranks: int, rcut: float,
     ghost_cap = min(ghost_cap, 27 * n_atoms)
     if coords is not None:
         # exact per-rank local/ghost maxima for the *initial* configuration
-        # (mean-density heuristics undershoot badly on clustered systems);
+        # (mean-density heuristics undershoot badly on clustered systems),
+        # counted under the same planes _make_grid will actually produce;
         # the 1.25 margin absorbs MD drift, overflow flags catch the rest
-        loc_max, gho_max = _max_rank_counts(coords, box, dims, halo_eff,
-                                            balanced)
+        vgrid = _build_grid(jnp.asarray(coords, jnp.float32),
+                            jnp.asarray(box.astype(np.float32)), dims,
+                            halo_eff, balanced, rebalance)
+        loc_max, gho_max = _max_rank_counts(coords, box, vgrid, halo_eff,
+                                            dims)
         local_cap = max(local_cap, int(np.ceil(1.25 * loc_max)) + 8)
         ghost_cap = max(ghost_cap, min(int(np.ceil(1.25 * gho_max)) + 16,
                                        27 * n_atoms))
 
     # worst-case slab width per axis (uniform, or quantile planes clamped to
-    # min_frac = 0.25 of uniform width)
+    # min_frac = 0.25 of uniform width; rebalanced planes share the clamp)
     g = np.asarray(dims, np.float64)
-    max_sub = sub if not balanced else box - (g - 1) * 0.25 * box / g
+    moving_planes = balanced or rebalance
+    max_sub = sub if not moving_planes else box - (g - 1) * 0.25 * box / g
 
     # global grid: cell edge >= halo_eff (keeps the halo expansion one cell
     # thick) but coarse enough for ~4 atoms per cell on average
@@ -287,7 +317,8 @@ def suggest_config(n_atoms: int, box, n_ranks: int, rcut: float,
             1.25 * _max_shifted_cell_occupancy(coords, box, r_list))))
     return DDConfig(grid_dims=dims, local_capacity=local_cap,
                     ghost_capacity=ghost_cap, nbr_capacity=nbr_capacity,
-                    halo=halo, balanced=balanced, force_mode=force_mode,
+                    halo=halo, balanced=balanced, rebalance=rebalance,
+                    force_mode=force_mode,
                     nbr_method=nbr_method, cell_dims=cell_dims,
                     cell_capacity=cell_cap, local_region=local_region,
                     ghost_region=ghost_region, subcell_dims=subcell_dims,
@@ -510,6 +541,16 @@ def _evaluate_rank(model: DPModel, params, coords_all, ref_all, st: dict,
 # shard_map drivers
 # ---------------------------------------------------------------------------
 
+def _pad_types(types: jax.Array, n_pad: int) -> jax.Array:
+    """Pad the type array to the mesh-multiple atom count (type 0 — the
+    parked coordinates keep pads out of every selection regardless)."""
+    types = jnp.asarray(types)
+    n = types.shape[0]
+    if n == n_pad:
+        return types
+    return jnp.concatenate([types, jnp.zeros(n_pad - n, types.dtype)])
+
+
 def _pad_atoms(coords: jax.Array, n_pad: int, box, types=None):
     """Pad the atom axis to a mesh multiple; padding is parked far below the
     box (never resident, never a ghost) at distinct positions, and is
@@ -523,14 +564,15 @@ def _pad_atoms(coords: jax.Array, n_pad: int, box, types=None):
     out = jnp.concatenate([coords, pad])
     if types is None:
         return out
-    return out, jnp.concatenate([types, jnp.zeros(n_pad - n, types.dtype)])
+    return out, _pad_types(types, n_pad)
 
 
 def _make_grid(coords_all, box, cfg: DDConfig, n_real: int) -> VirtualGrid:
-    if cfg.balanced:
-        # quantiles over the *real* atoms only (padding would skew planes)
-        return balanced_planes(coords_all[:n_real], box, cfg.grid_dims)
-    return uniform_grid(box, cfg.grid_dims)
+    # quantiles/costs over the *real* atoms only (padding would skew
+    # planes); rebalance planes are re-derived at every assembly, so they
+    # track the configuration as it drifts
+    return _build_grid(coords_all[:n_real], box, cfg.grid_dims, cfg.halo_eff,
+                       cfg.balanced, cfg.rebalance)
 
 
 def _state_specs(axis: str) -> DDState:
@@ -538,7 +580,8 @@ def _state_specs(axis: str) -> DDState:
         l_idx=P(axis), l_mask=P(axis), g_idx=P(axis),
         g_shift=P(axis, None), g_mask=P(axis), buf_types=P(axis),
         buf_mask=P(axis), nbr_idx=P(axis, None), nbr_mask=P(axis, None),
-        local_count=P(), ghost_count=P(), overflow=P(), ref=P(None, None))
+        local_count=P(), ghost_count=P(), cost_max=P(), overflow=P(),
+        ref=P(None, None))
 
 
 def make_assembly_fn(model: DPModel, cfg: DDConfig, mesh: Mesh, box,
@@ -562,6 +605,8 @@ def make_assembly_fn(model: DPModel, cfg: DDConfig, mesh: Mesh, box,
         grid = _make_grid(coords_all, box, cfg, n_atoms)
         st = _assemble_rank(coords_all, types_all, box, grid, cfg, rcut,
                             rank, n_atoms)
+        st["cost_max"] = jax.lax.pmax(st["local_count"] + st["ghost_count"],
+                                      axis)
         st["local_count"] = jax.lax.psum(st["local_count"], axis)
         st["ghost_count"] = jax.lax.psum(st["ghost_count"], axis)
         st["overflow"] = jax.lax.psum(st["overflow"].astype(jnp.int32), axis)
@@ -622,8 +667,13 @@ def make_evaluation_fn(model: DPModel, cfg: DDConfig, mesh: Mesh, box,
                              axis)
         overflow = st.overflow + jax.lax.psum(trim_ovf.astype(jnp.int32),
                                               axis)
+        total = st.local_count + st.ghost_count
         diag = {"local_count": st.local_count, "ghost_count": st.ghost_count,
                 "overflow": overflow, "max_disp2": disp2,
+                # max/mean per-rank Eq.-8 cost: the load-imbalance figure the
+                # rebalance knob is meant to push toward 1.0
+                "cost_ratio": st.cost_max * cfg.n_ranks
+                              / jnp.maximum(total, 1).astype(jnp.float32),
                 "needs_rebuild": (disp2 > (0.5 * cfg.skin) ** 2)
                                  | (st.overflow > 0)}
         return energy, forces, diag
@@ -631,7 +681,8 @@ def make_evaluation_fn(model: DPModel, cfg: DDConfig, mesh: Mesh, box,
     out_force_spec = (P(axis, None) if cfg.reduce_mode == "reduce_scatter"
                       else P(None, None))
     diag_specs = {k: P() for k in ("local_count", "ghost_count", "overflow",
-                                   "max_disp2", "needs_rebuild")}
+                                   "max_disp2", "cost_ratio",
+                                   "needs_rebuild")}
     mapped = compat.shard_map(
         per_rank, mesh=mesh,
         in_specs=(P(), P(axis, None), _state_specs(axis)),
@@ -708,8 +759,13 @@ def make_distributed_force_fn(model: DPModel, cfg: DDConfig, mesh: Mesh,
                                           tiled=True)        # collective 2'
         else:
             forces = jax.lax.psum(f_global, axis)            # collective 2
-        diag = {"local_count": jax.lax.psum(st["local_count"], axis),
-                "ghost_count": jax.lax.psum(st["ghost_count"], axis),
+        cost_max = jax.lax.pmax(st["local_count"] + st["ghost_count"], axis)
+        local_count = jax.lax.psum(st["local_count"], axis)
+        ghost_count = jax.lax.psum(st["ghost_count"], axis)
+        diag = {"local_count": local_count, "ghost_count": ghost_count,
+                "cost_ratio": cost_max * cfg.n_ranks
+                              / jnp.maximum(local_count + ghost_count,
+                                            1).astype(jnp.float32),
                 "overflow": jax.lax.psum(st["overflow"].astype(jnp.int32),
                                          axis)}
         return energy, forces, diag
@@ -720,7 +776,8 @@ def make_distributed_force_fn(model: DPModel, cfg: DDConfig, mesh: Mesh,
         per_rank, mesh=mesh,
         in_specs=(P(), P(axis, None), P()),
         out_specs=(P(), out_force_spec,
-                   {"local_count": P(), "ghost_count": P(), "overflow": P()}))
+                   {"local_count": P(), "ghost_count": P(),
+                    "cost_ratio": P(), "overflow": P()}))
 
     def fn(params, coords, types):
         coords_p, types_p = _pad_atoms(coords, n_pad, box, types)
@@ -728,6 +785,286 @@ def make_distributed_force_fn(model: DPModel, cfg: DDConfig, mesh: Mesh,
         return e, f[:n_atoms], diag
 
     return jax.jit(fn)
+
+
+# ---------------------------------------------------------------------------
+# Replica-batched drivers: R independent replicas of the same system as one
+# SPMD program on a 2-D (replica x dd) mesh.  The replica axis of every input
+# is sharded over the mesh's replica dimension; the replicas resident on a
+# device group are vmapped, so each step issues ONE batched coordinate
+# all-gather and ONE batched force reduction over the dd axis instead of R
+# sequential collective pairs.  All collectives name only ``cfg.axis``, so
+# they stay within a replica's dd group — replicas never communicate here
+# (replica exchange is a separate move, see ``repro.ensemble.exchange``).
+# ---------------------------------------------------------------------------
+
+def _replica_layout(mesh: Mesh, cfg: DDConfig, n_replicas: int,
+                    replica_axis: str) -> int:
+    """Validate the 2-D mesh and return replicas-per-device-group."""
+    if replica_axis not in mesh.shape or cfg.axis not in mesh.shape:
+        raise ValueError(
+            f"mesh axes {tuple(mesh.shape)} must include "
+            f"{replica_axis!r} and {cfg.axis!r}")
+    if mesh.shape[cfg.axis] != cfg.n_ranks:
+        raise ValueError(f"mesh {cfg.axis} size {mesh.shape[cfg.axis]} != "
+                         f"grid {cfg.n_ranks}")
+    rd = mesh.shape[replica_axis]
+    if n_replicas % rd:
+        raise ValueError(f"n_replicas {n_replicas} not divisible by the "
+                         f"{replica_axis!r} mesh axis ({rd})")
+    return n_replicas // rd
+
+
+def _ens_state_specs(rep: str, axis: str) -> DDState:
+    return DDState(
+        l_idx=P(rep, axis), l_mask=P(rep, axis), g_idx=P(rep, axis),
+        g_shift=P(rep, axis, None), g_mask=P(rep, axis),
+        buf_types=P(rep, axis), buf_mask=P(rep, axis),
+        nbr_idx=P(rep, axis, None), nbr_mask=P(rep, axis, None),
+        local_count=P(rep), ghost_count=P(rep), cost_max=P(rep),
+        overflow=P(rep), ref=P(rep, None, None))
+
+
+def _pad_atoms_batched(coords: jax.Array, n_pad: int, box) -> jax.Array:
+    """(R, N, 3) -> (R, n_pad, 3) with the same deterministic parking as
+    :func:`_pad_atoms` (identical pad per replica)."""
+    return jax.vmap(lambda c: _pad_atoms(c, n_pad, box))(coords)
+
+
+def make_batched_assembly_fn(model: DPModel, cfg: DDConfig, mesh: Mesh, box,
+                             n_atoms: int, n_replicas: int,
+                             replica_axis: str = "replica"):
+    """Replica-batched :func:`make_assembly_fn`.
+
+    Signature: f(coords (R, N, 3), types (N,)) -> DDState whose every leaf
+    carries a leading replica axis ((R,) for the scalar diagnostics).
+    """
+    cfg.validate(box)
+    axis = cfg.axis
+    _replica_layout(mesh, cfg, n_replicas, replica_axis)
+    rcut = model.cfg.descriptor.rcut
+    box = jnp.asarray(box)
+    n_pad = cfg.padded_atoms(n_atoms)
+
+    def per_rank(coords_shard, types_all):
+        # (r_loc, n_pad/P, 3) -> one batched collective 1 -> (r_loc, n_pad, 3)
+        coords_all = jax.lax.all_gather(coords_shard, axis, axis=1,
+                                        tiled=True)
+        rank = jax.lax.axis_index(axis)
+
+        def one(coords_one):
+            grid = _make_grid(coords_one, box, cfg, n_atoms)
+            return _assemble_rank(coords_one, types_all, box, grid, cfg,
+                                  rcut, rank, n_atoms)
+
+        st = jax.vmap(one)(coords_all)
+        st["cost_max"] = jax.lax.pmax(st["local_count"] + st["ghost_count"],
+                                      axis)
+        st["local_count"] = jax.lax.psum(st["local_count"], axis)
+        st["ghost_count"] = jax.lax.psum(st["ghost_count"], axis)
+        st["overflow"] = jax.lax.psum(st["overflow"].astype(jnp.int32), axis)
+        return st
+
+    specs = _ens_state_specs(replica_axis, axis)
+    out_specs = {f.name: getattr(specs, f.name)
+                 for f in dataclasses.fields(DDState) if f.name != "ref"}
+    mapped = compat.shard_map(per_rank, mesh=mesh,
+                              in_specs=(P(replica_axis, axis, None), P()),
+                              out_specs=out_specs)
+
+    def assemble(coords, types):
+        coords_p = _pad_atoms_batched(coords, n_pad, box)
+        st = mapped(coords_p, types)
+        return DDState(ref=coords_p, **st)
+
+    return jax.jit(assemble)
+
+
+def make_batched_evaluation_fn(model: DPModel, cfg: DDConfig, mesh: Mesh,
+                               box, n_atoms: int, n_replicas: int,
+                               replica_axis: str = "replica"):
+    """Replica-batched :func:`make_evaluation_fn`.
+
+    Signature: f(params, coords (R, N, 3), state) ->
+    (energy (R,), forces (R, N, 3), diag of (R,) leaves).  Per-replica
+    semantics are identical to the unbatched evaluation — ``needs_rebuild``
+    and the overflow counts are reported per replica so callers can track
+    each trajectory's skin budget independently.
+    """
+    cfg.validate(box)
+    axis = cfg.axis
+    _replica_layout(mesh, cfg, n_replicas, replica_axis)
+    rcut = model.cfg.descriptor.rcut
+    box = jnp.asarray(box)
+    n_pad = cfg.padded_atoms(n_atoms)
+    chunk = n_pad // cfg.n_ranks
+
+    def per_rank(params, coords_shard, st: DDState):
+        coords_all = jax.lax.all_gather(coords_shard, axis, axis=1,
+                                        tiled=True)  # batched collective 1
+        rank = jax.lax.axis_index(axis)
+        st_d = {f.name: getattr(st, f.name)
+                for f in dataclasses.fields(DDState) if f.name != "ref"}
+
+        def one(coords_one, ref_one, st_one):
+            return _evaluate_rank(model, params, coords_one, ref_one,
+                                  st_one, box, cfg, rcut)
+
+        e_local, f_global, trim_ovf = jax.vmap(one)(coords_all, st.ref, st_d)
+        energy = jax.lax.psum(e_local, axis)
+        if cfg.reduce_mode == "reduce_scatter":
+            forces = jax.lax.psum_scatter(f_global, axis, scatter_dimension=1,
+                                          tiled=True)  # batched collective 2'
+        else:
+            forces = jax.lax.psum(f_global, axis)       # batched collective 2
+        ref_shard = jax.lax.dynamic_slice_in_dim(st.ref, rank * chunk, chunk,
+                                                 axis=1)
+        disp2 = jax.lax.pmax(
+            jax.vmap(lambda c, r: max_displacement2(c, r, box))(
+                coords_shard, ref_shard), axis)
+        overflow = st.overflow + jax.lax.psum(trim_ovf.astype(jnp.int32),
+                                              axis)
+        total = st.local_count + st.ghost_count
+        diag = {"local_count": st.local_count, "ghost_count": st.ghost_count,
+                "overflow": overflow, "max_disp2": disp2,
+                "cost_ratio": st.cost_max * cfg.n_ranks
+                              / jnp.maximum(total, 1).astype(jnp.float32),
+                "needs_rebuild": (disp2 > (0.5 * cfg.skin) ** 2)
+                                 | (st.overflow > 0)}
+        return energy, forces, diag
+
+    out_force_spec = (P(replica_axis, axis, None)
+                      if cfg.reduce_mode == "reduce_scatter"
+                      else P(replica_axis, None, None))
+    diag_specs = {k: P(replica_axis)
+                  for k in ("local_count", "ghost_count", "overflow",
+                            "max_disp2", "cost_ratio", "needs_rebuild")}
+    mapped = compat.shard_map(
+        per_rank, mesh=mesh,
+        in_specs=(P(), P(replica_axis, axis, None),
+                  _ens_state_specs(replica_axis, axis)),
+        out_specs=(P(replica_axis), out_force_spec, diag_specs))
+
+    def evaluate(params, coords, state):
+        coords_p = _pad_atoms_batched(coords, n_pad, box)
+        e, f, diag = mapped(params, coords_p, state)
+        return e, f[:, :n_atoms], diag
+
+    return jax.jit(evaluate)
+
+
+def make_batched_check_fn(cfg: DDConfig, mesh: Mesh, box, n_atoms: int,
+                          n_replicas: int, replica_axis: str = "replica"):
+    """Replica-batched :func:`make_displacement_check_fn`:
+    f(coords (R, N, 3), state) -> (R,) bool per-replica rebuild flags."""
+    axis = cfg.axis
+    _replica_layout(mesh, cfg, n_replicas, replica_axis)
+    box = jnp.asarray(box)
+    n_pad = cfg.padded_atoms(n_atoms)
+    chunk = n_pad // cfg.n_ranks
+
+    def per_rank(coords_shard, ref, overflow):
+        rank = jax.lax.axis_index(axis)
+        ref_shard = jax.lax.dynamic_slice_in_dim(ref, rank * chunk, chunk,
+                                                 axis=1)
+        disp2 = jax.lax.pmax(
+            jax.vmap(lambda c, r: max_displacement2(c, r, box))(
+                coords_shard, ref_shard), axis)
+        return (disp2 > (0.5 * cfg.skin) ** 2) | (overflow > 0)
+
+    mapped = compat.shard_map(
+        per_rank, mesh=mesh,
+        in_specs=(P(replica_axis, axis, None), P(replica_axis, None, None),
+                  P(replica_axis)),
+        out_specs=P(replica_axis))
+
+    def check(coords, state):
+        return mapped(_pad_atoms_batched(coords, n_pad, box), state.ref,
+                      state.overflow)
+
+    return jax.jit(check)
+
+
+def make_batched_force_fn(model: DPModel, cfg: DDConfig, mesh: Mesh, box,
+                          n_atoms: int, n_replicas: int,
+                          replica_axis: str = "replica"):
+    """Replica-batched :func:`make_distributed_force_fn` (fused per-step
+    assembly + evaluation).
+
+    Signature: f(params, coords (R, N, 3), types (N,)) ->
+    (energy (R,), forces (R, N, 3), diag of (R,) leaves).  One batched
+    all-gather feeds every local replica's virtual decomposition; one
+    batched reduction returns all their forces.
+    """
+    cfg.validate(box)
+    axis = cfg.axis
+    _replica_layout(mesh, cfg, n_replicas, replica_axis)
+    rcut = model.cfg.descriptor.rcut
+    box = jnp.asarray(box)
+    n_pad = cfg.padded_atoms(n_atoms)
+
+    def per_rank(params, coords_shard, types_all):
+        coords_all = jax.lax.all_gather(coords_shard, axis, axis=1,
+                                        tiled=True)  # batched collective 1
+        rank = jax.lax.axis_index(axis)
+
+        def one(coords_one):
+            grid = _make_grid(coords_one, box, cfg, n_atoms)
+            st = _assemble_rank(coords_one, types_all, box, grid, cfg, rcut,
+                                rank, n_atoms)
+            e, f, trim_ovf = _evaluate_rank(model, params, coords_one,
+                                            coords_one, st, box, cfg, rcut)
+            return (e, f, st["overflow"] | trim_ovf, st["local_count"],
+                    st["ghost_count"])
+
+        e_local, f_global, ovf, l_count, g_count = jax.vmap(one)(coords_all)
+        energy = jax.lax.psum(e_local, axis)
+        if cfg.reduce_mode == "reduce_scatter":
+            forces = jax.lax.psum_scatter(f_global, axis, scatter_dimension=1,
+                                          tiled=True)  # batched collective 2'
+        else:
+            forces = jax.lax.psum(f_global, axis)       # batched collective 2
+        cost_max = jax.lax.pmax(l_count + g_count, axis)
+        local_count = jax.lax.psum(l_count, axis)
+        ghost_count = jax.lax.psum(g_count, axis)
+        diag = {"local_count": local_count, "ghost_count": ghost_count,
+                "cost_ratio": cost_max * cfg.n_ranks
+                              / jnp.maximum(local_count + ghost_count,
+                                            1).astype(jnp.float32),
+                "overflow": jax.lax.psum(ovf.astype(jnp.int32), axis)}
+        return energy, forces, diag
+
+    out_force_spec = (P(replica_axis, axis, None)
+                      if cfg.reduce_mode == "reduce_scatter"
+                      else P(replica_axis, None, None))
+    diag_specs = {k: P(replica_axis) for k in ("local_count", "ghost_count",
+                                               "cost_ratio", "overflow")}
+    mapped = compat.shard_map(
+        per_rank, mesh=mesh,
+        in_specs=(P(), P(replica_axis, axis, None), P()),
+        out_specs=(P(replica_axis), out_force_spec, diag_specs))
+
+    def fn(params, coords, types):
+        coords_p = _pad_atoms_batched(coords, n_pad, box)
+        e, f, diag = mapped(params, coords_p, _pad_types(types, n_pad))
+        return e, f[:, :n_atoms], diag
+
+    return jax.jit(fn)
+
+
+def single_domain_forces_batched(model: DPModel, params, coords, types, box,
+                                 nbr_capacity: int):
+    """Replica-batched single-domain reference: coords (R, N, 3) -> per-
+    replica (energy (R,), forces (R, N, 3)) through the model's vmapped
+    ``energy_and_forces_batched`` (one fused dispatch for all replicas)."""
+    from ..md.neighbors import brute_force_neighbor_list
+    box = jnp.asarray(box)
+    rcut = model.cfg.descriptor.rcut
+    nl = jax.vmap(lambda c: brute_force_neighbor_list(
+        c, box, rcut, nbr_capacity, half=False))(coords)
+    local = jnp.ones(coords.shape[:2], coords.dtype)
+    return model.energy_and_forces_batched(params, coords, types, nl.idx,
+                                           nl.mask, local, box=box)
 
 
 def single_domain_forces(model: DPModel, params, coords, types, box,

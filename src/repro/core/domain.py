@@ -101,6 +101,16 @@ def uniform_grid(box, dims: tuple[int, int, int]) -> VirtualGrid:
                        planes_z=mk(dims[2], box[2]), dims=dims)
 
 
+def _weighted_quantiles(x: jax.Array, w: jax.Array, qs: jax.Array) -> jax.Array:
+    """Values where the cumulative weight fraction crosses each q in ``qs``."""
+    order = jnp.argsort(x)
+    xs = x[order]
+    cw = jnp.cumsum(w[order].astype(jnp.float32))
+    cw = cw / jnp.maximum(cw[-1], 1e-12)
+    sel = jnp.searchsorted(cw, qs)
+    return xs[jnp.clip(sel, 0, x.shape[0] - 1)]
+
+
 def balanced_planes(coords: jax.Array, box, dims: tuple[int, int, int],
                     weights=None) -> VirtualGrid:
     """Load-balanced rectilinear grid from per-axis quantiles (beyond paper).
@@ -109,13 +119,20 @@ def balanced_planes(coords: jax.Array, box, dims: tuple[int, int, int],
     an O(N log N) approximation to GROMACS's dynamic load balancing that
     directly reduces the straggler penalty the paper measured.  Planes are
     kept at least ``min_frac`` of the uniform width to bound halo blow-up.
+
+    ``weights`` (N,) optionally replaces the uniform per-atom population with
+    a per-atom cost (e.g. :func:`atom_costs`): the planes then equalize the
+    *measured* Eq.-8 cost per slab instead of the coordinate quantiles —
+    the feedback half of the ``DDConfig.rebalance`` loop.
     """
     box = jnp.asarray(box)
 
     def axis_planes(x, g, L):
         if g == 1:
             return jnp.array([0.0, 1.0]) * L
-        qs = jnp.quantile(x, jnp.linspace(0.0, 1.0, g + 1)[1:-1])
+        q = jnp.linspace(0.0, 1.0, g + 1)[1:-1]
+        qs = (jnp.quantile(x, q) if weights is None
+              else _weighted_quantiles(x, weights, q))
         planes = jnp.concatenate([jnp.zeros(1), qs, L[None]])
         # enforce monotone, minimum slab width of 25% of uniform
         min_w = 0.25 * L / g
@@ -339,6 +356,25 @@ def select_ghosts_cells(coords: jax.Array, box, grid: VirtualGrid,
             [shift_vec, jnp.zeros((capacity - k, 3), coords.dtype)])
     count = ghost.sum()
     return idx, shift_vec, mask, count, region_overflow | table.overflow
+
+
+def atom_costs(coords: jax.Array, box, grid: VirtualGrid,
+               halo: float) -> jax.Array:
+    """(N,) per-atom buffer multiplicity under ``grid``: how many rank
+    buffers (local residence + every periodic ghost image) each atom lands
+    in.  Summed over atoms this equals ``partition_costs(...).sum()`` — it is
+    the same Eq.-8 cost model attributed back to atoms, which is what the
+    ``rebalance`` feedback loop feeds into :func:`balanced_planes` as
+    weights."""
+    box = jnp.asarray(box)
+    shifts = jnp.asarray(IMAGE_SHIFTS, coords.dtype) * box[None, :]
+    pos = coords[None, :, :] + shifts[:, None, :]          # (27, N, 3)
+
+    def count(rank):
+        lo, hi = grid.bounds(rank)
+        return ((pos >= lo - halo) & (pos < hi + halo)).all(-1).sum(0)
+
+    return jax.vmap(count)(jnp.arange(grid.n_ranks)).sum(0)
 
 
 def partition_costs(coords: jax.Array, box, grid: VirtualGrid,

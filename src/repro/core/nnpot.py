@@ -128,7 +128,9 @@ class DeepmdForceProvider:
         return self.skin > 0
 
     def _to_model(self, positions: jax.Array) -> jax.Array:
-        nn_pos = positions[self.nn_indices] * self.units.length_to_model
+        # leading batch axes (the ensemble's replica axis) pass through
+        nn_pos = (positions[..., self.nn_indices, :]
+                  * self.units.length_to_model)
         # wrap into the model box (virtual DD expects wrapped coordinates)
         return jnp.mod(nn_pos, self.box_model)
 
@@ -137,6 +139,9 @@ class DeepmdForceProvider:
         nn_pos = self._to_model(positions)
         if self.dd_config is not None:
             return self._asm_fn(nn_pos, self.nn_types)
+        return self._single_domain_assemble(nn_pos)
+
+    def _single_domain_assemble(self, nn_pos: jax.Array):
         return single_domain_state(self.model, nn_pos, self.box_model,
                                    self.nbr_capacity, self.skin)
 
@@ -152,6 +157,9 @@ class DeepmdForceProvider:
         nn_pos = self._to_model(positions)
         if self.dd_config is not None:
             return self._check_fn(nn_pos, state)
+        return self._single_domain_needs_rebuild(nn_pos, state)
+
+    def _single_domain_needs_rebuild(self, nn_pos: jax.Array, state):
         return _nlist_needs_rebuild(state, nn_pos, self.box_model, self.skin)
 
     def evaluate(self, positions: jax.Array, state):
@@ -168,14 +176,18 @@ class DeepmdForceProvider:
             flags = {"overflow": diag["overflow"] > 0,
                      "needs_rebuild": diag["needs_rebuild"]}
         else:
-            e, f_nn = single_domain_forces_nlist(
-                self.model, self.params, nn_pos, self.nn_types,
-                self.box_model, state)
-            flags = {"overflow": state.overflow,
-                     "needs_rebuild": _nlist_needs_rebuild(
-                         state, nn_pos, self.box_model, self.skin)}
+            e, f_nn, flags = self._single_domain_evaluate(nn_pos, state)
         e, forces = self._to_engine(e, f_nn, positions)
         return e, forces, flags
+
+    def _single_domain_evaluate(self, nn_pos: jax.Array, state):
+        e, f_nn = single_domain_forces_nlist(
+            self.model, self.params, nn_pos, self.nn_types,
+            self.box_model, state)
+        flags = {"overflow": state.overflow,
+                 "needs_rebuild": self._single_domain_needs_rebuild(
+                     nn_pos, state)}
+        return e, f_nn, flags
 
     def grow(self) -> None:
         """Double the static capacities after an overflow (rare: triggers a
@@ -200,8 +212,10 @@ class DeepmdForceProvider:
     def _to_engine(self, e, f_nn, positions):
         e = e * self.units.energy_to_engine
         f_nn = f_nn * self.units.force_to_engine
-        forces = jnp.zeros((self.n_atoms, 3), positions.dtype)
-        forces = forces.at[self.nn_indices].set(f_nn.astype(positions.dtype))
+        forces = jnp.zeros(positions.shape[:-2] + (self.n_atoms, 3),
+                           positions.dtype)
+        forces = forces.at[..., self.nn_indices, :].set(
+            f_nn.astype(positions.dtype))
         return e.astype(positions.dtype), forces
 
     def __call__(self, positions: jax.Array, box: jax.Array):
@@ -216,13 +230,13 @@ class DeepmdForceProvider:
             if self._state is None:
                 self._state = self.assemble(positions)
             e, forces, flags = self.evaluate(positions, self._state)
-            if bool(flags["needs_rebuild"]):
+            if bool(jnp.any(flags["needs_rebuild"])):
                 self._state = self.assemble(positions)
                 e, forces, flags = self.evaluate(positions, self._state)
             for _ in range(8):
                 # capacity overflow (assembly or k_eval trim) would silently
                 # truncate forces: grow and recompute until the state fits
-                if not bool(flags["overflow"]):
+                if not bool(jnp.any(flags["overflow"])):
                     break
                 self.grow()
                 self._state = self.assemble(positions)
@@ -230,7 +244,7 @@ class DeepmdForceProvider:
             else:
                 raise RuntimeError("special-force capacity still exceeded "
                                    "after 8 doublings")
-            self.last_diag = {k: bool(v) for k, v in flags.items()}
+            self.last_diag = {k: bool(jnp.any(v)) for k, v in flags.items()}
             return e, forces
         nn_pos = self._to_model(positions)
         if self._dist_fn is not None:
@@ -240,7 +254,10 @@ class DeepmdForceProvider:
                 # step the diag values are tracers and must not leak
                 self.last_diag = diag
         else:
-            e, f_nn = single_domain_forces(
-                self.model, self.params, nn_pos, self.nn_types,
-                self.box_model, self.nbr_capacity)
+            e, f_nn = self._single_domain_forces(nn_pos)
         return self._to_engine(e, f_nn, positions)
+
+    def _single_domain_forces(self, nn_pos: jax.Array):
+        return single_domain_forces(
+            self.model, self.params, nn_pos, self.nn_types,
+            self.box_model, self.nbr_capacity)

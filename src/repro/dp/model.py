@@ -120,6 +120,20 @@ class DPModel:
         (_, e_rep), g = jax.value_and_grad(fsum, has_aux=True)(coords)
         return e_rep, -g
 
+    def energy_and_forces_batched(self, params, coords, types, nbr_idx,
+                                  nbr_mask, local_mask, box=None):
+        """Replica-batched :meth:`energy_and_forces`: every positional tensor
+        carries a leading replica axis (coords (R, C, 3), nbr_idx (R, C, K),
+        ...) except ``types``, which may be shared ((C,)) or per-replica
+        ((R, C)).  Params and box are shared.  Returns (energy (R,), forces
+        (R, C, 3)) from a single vmapped dispatch — the ensemble layer's
+        amortization of R sequential model calls."""
+        t_axis = 0 if jnp.ndim(types) == 2 else None
+        fn = lambda c, t, i, m, lm: self.energy_and_forces(
+            params, c, t, i, m, lm, box)
+        return jax.vmap(fn, in_axes=(0, t_axis, 0, 0, 0))(
+            coords, types, nbr_idx, nbr_mask, local_mask)
+
     def energy_forces_virial(self, params, coords, types, nbr_idx, nbr_mask,
                              local_mask, box=None):
         e, f = self.energy_and_forces(params, coords, types, nbr_idx,

@@ -1,0 +1,93 @@
+"""Jit-safe temperature-ladder replica exchange (parallel tempering).
+
+The move follows the standard REMD recipe (Sugita & Okamoto 1999), in the
+*temperature-swap* convention: configurations stay on their replica slot,
+temperatures migrate.  At an attempt with parity p, rung pairs
+(k, k+1) with k % 2 == p are proposed; the Metropolis criterion for
+swapping rungs i < j is
+
+    P_acc = min(1, exp[(beta_i - beta_j) (E_i - E_j)])
+
+with E the potential energy of the configuration currently holding each
+rung.  On acceptance the two replicas trade rungs and their velocities are
+rescaled by sqrt(T_new / T_old) so the kinetic energy matches the new
+thermostat target instantly.
+
+Determinism: every replica's PRNG stream is split exactly once per attempt
+— whether or not it is paired — and a pair consumes the *lower rung's*
+uniform draw, so the accept/reject sequence depends only on the per-replica
+seeds, never on R, the parity schedule, or device layout.
+
+Everything is ``lax``-friendly (argsort + gathers, no host branches), so an
+exchange can also be fused into a scanned window if desired; the engine
+applies it at window boundaries.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..md.system import KB
+from .state import ReplicaState
+
+
+def geometric_ladder(t_min: float, t_max: float, n: int) -> tuple:
+    """The standard REMD ladder: geometric spacing gives roughly uniform
+    acceptance across rungs for a system with T-independent heat capacity."""
+    if n == 1:
+        return (float(t_min),)
+    r = (t_max / t_min) ** (1.0 / (n - 1))
+    return tuple(float(t_min * r ** k) for k in range(n))
+
+
+def make_exchange_fn(temp_table) -> Callable:
+    """Build the jitted exchange move for a static temperature table.
+
+    Returns ``exchange(state, energies (R,), parity ()) ->
+    (new_state, stats)`` where ``stats`` carries scalar
+    ``attempted``/``accepted`` counts plus per-rung-pair ``pair_attempts`` /
+    ``pair_accepts`` vectors ((R-1,), pair k = rungs (k, k+1)).
+    """
+    temp_table = jnp.asarray(temp_table, jnp.float32)
+    n = temp_table.shape[0]
+    beta = 1.0 / (KB * temp_table)                       # per rung
+
+    def exchange(state: ReplicaState, energies: jax.Array, parity):
+        ladder = state.ladder
+        order = jnp.argsort(ladder)                      # order[k] = replica at rung k
+        e_r = energies[order]
+
+        # one split per replica per attempt, pairing-independent
+        keys = jax.vmap(jax.random.split)(state.rng)     # (R, 2, key)
+        new_rng = keys[:, 0]
+        u = jax.vmap(lambda k: jax.random.uniform(k, ()))(keys[:, 1])
+        u_r = u[order]                                   # draw of the rung-k holder
+
+        k = jnp.arange(n)
+        is_lo = ((k % 2) == (parity % 2)) & (k + 1 < n)  # lower member of a pair
+        delta = ((beta - jnp.roll(beta, -1))
+                 * (e_r - jnp.roll(e_r, -1)))            # rung k vs k+1
+        acc = is_lo & (jnp.log(u_r) < delta)
+
+        move_up = acc                                    # rung k -> k+1
+        move_dn = jnp.roll(acc, 1)                       # rung k -> k-1
+        target = jnp.where(move_up, k + 1, jnp.where(move_dn, k - 1, k))
+        new_ladder = jnp.zeros_like(ladder).at[order].set(
+            target.astype(ladder.dtype))
+
+        scale = jnp.sqrt(temp_table[new_ladder] / temp_table[ladder])
+        velocities = state.velocities * scale[:, None, None]
+        stats = {
+            "attempted": is_lo.sum(),
+            "accepted": acc.sum(),
+            "pair_attempts": is_lo[:-1].astype(jnp.int32),
+            "pair_accepts": acc[:-1].astype(jnp.int32),
+        }
+        new_state = dataclasses.replace(state, velocities=velocities,
+                                        rng=new_rng, ladder=new_ladder)
+        return new_state, stats
+
+    return jax.jit(exchange)

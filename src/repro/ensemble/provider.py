@@ -1,0 +1,92 @@
+"""Replica-batched Deep-Potential force provider.
+
+``BatchedDeepmdProvider`` is ``repro.core.DeepmdForceProvider`` lifted over
+a leading replica axis: positions arrive as (R, N, 3) and energies/forces
+return as (R,) / (R, N, 3).  The unit conversions, the stateful
+assemble/evaluate/grow protocol and the capacity-growth bookkeeping are all
+inherited — only the compute entry points change:
+
+* distributed (``dd_config`` given): the replica-batched drivers from
+  ``repro.core.ddinfer`` run on a 2-D (replica x dd) mesh, issuing one
+  batched all-gather + one batched force reduction per step for every
+  replica resident on a device group;
+* single-domain: the per-replica pipeline is vmapped (the model call goes
+  through ``DPModel.energy_and_forces_batched``), so R replicas cost one
+  dispatch.
+
+Per-replica semantics are preserved: ``evaluate`` flags
+(``needs_rebuild`` / ``overflow``) come back shaped (R,), so the ensemble
+engine can track each trajectory's skin budget independently.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from ..core.ddinfer import (DDConfig, make_batched_assembly_fn,
+                            make_batched_check_fn, make_batched_evaluation_fn,
+                            make_batched_force_fn,
+                            single_domain_forces_batched,
+                            single_domain_forces_nlist, single_domain_state)
+from ..core.nnpot import DeepmdForceProvider, UnitConversion
+from ..dp.model import DPModel
+from ..md.neighbors import needs_rebuild as _nlist_needs_rebuild
+
+
+class BatchedDeepmdProvider(DeepmdForceProvider):
+    """Plugs into ``EnsembleEngine(special_force=...)``."""
+
+    def __init__(self, model: DPModel, params, nn_indices: np.ndarray,
+                 types, box, n_atoms: int, n_replicas: int,
+                 dd_config: Optional[DDConfig] = None,
+                 mesh: Optional[Mesh] = None,
+                 replica_axis: str = "replica",
+                 units: UnitConversion = UnitConversion(),
+                 nbr_capacity: int = 64, skin: float = 0.0):
+        self.n_replicas = n_replicas
+        self.replica_axis = replica_axis
+        super().__init__(model, params, nn_indices, types, box, n_atoms,
+                         dd_config=dd_config, mesh=mesh, units=units,
+                         nbr_capacity=nbr_capacity, skin=skin)
+
+    def _build_fns(self) -> None:
+        if self.dd_config is not None:
+            args = (self.model, self.dd_config, self.mesh, self.box_model,
+                    self.n_nn, self.n_replicas)
+            kw = dict(replica_axis=self.replica_axis)
+            self._dist_fn = make_batched_force_fn(*args, **kw)
+            self._asm_fn = make_batched_assembly_fn(*args, **kw)
+            self._eval_fn = make_batched_evaluation_fn(*args, **kw)
+            self._check_fn = make_batched_check_fn(
+                self.dd_config, self.mesh, self.box_model, self.n_nn,
+                self.n_replicas, replica_axis=self.replica_axis)
+        else:
+            self._dist_fn = None
+
+    # -- vmapped single-domain path ----------------------------------------
+
+    def _single_domain_assemble(self, nn_pos: jax.Array):
+        return jax.vmap(lambda p: single_domain_state(
+            self.model, p, self.box_model, self.nbr_capacity, self.skin))(
+                nn_pos)
+
+    def _single_domain_needs_rebuild(self, nn_pos: jax.Array, state):
+        return jax.vmap(lambda s, p: _nlist_needs_rebuild(
+            s, p, self.box_model, self.skin))(state, nn_pos)
+
+    def _single_domain_evaluate(self, nn_pos: jax.Array, state):
+        e, f_nn = jax.vmap(lambda p, s: single_domain_forces_nlist(
+            self.model, self.params, p, self.nn_types, self.box_model, s))(
+                nn_pos, state)
+        flags = {"overflow": state.overflow,
+                 "needs_rebuild": self._single_domain_needs_rebuild(
+                     nn_pos, state)}
+        return e, f_nn, flags
+
+    def _single_domain_forces(self, nn_pos: jax.Array):
+        return single_domain_forces_batched(
+            self.model, self.params, nn_pos, self.nn_types, self.box_model,
+            self.nbr_capacity)

@@ -1,0 +1,57 @@
+"""Replica-batched MD state: R trajectories as one pytree.
+
+``ReplicaState`` is ``repro.md.integrators.MDState`` with every leaf gaining
+a leading replica axis, plus the replica-exchange bookkeeping: ``ladder``
+maps each replica slot to its current rung in the (static) temperature
+table, and ``rng`` holds one independent PRNG stream per replica (advanced
+deterministically by both the Langevin integrator path and every exchange
+attempt, so trajectories are reproducible replica-by-replica).
+
+The integrators operate on it unchanged — ``dataclasses.replace`` inside
+``leapfrog_step`` preserves the extra fields, and ``jax.vmap`` over the
+pytree peels the replica axis off every leaf (``ladder`` rides along).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..md.integrators import MDState
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ReplicaState:
+    positions: jax.Array   # (R, N, 3)
+    velocities: jax.Array  # (R, N, 3)
+    forces: jax.Array      # (R, N, 3)
+    step: jax.Array        # (R,) int32 (kept in lockstep by the engine)
+    rng: jax.Array         # (R, key) per-replica PRNG streams
+    ladder: jax.Array      # (R,) int32 rung index into the temperature table
+
+    @property
+    def n_replicas(self) -> int:
+        return self.positions.shape[0]
+
+
+def stack_states(states: Sequence[MDState], ladder=None) -> ReplicaState:
+    """Stack R single-trajectory states into one batched state."""
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+    if ladder is None:
+        ladder = jnp.arange(len(states), dtype=jnp.int32)
+    return ReplicaState(positions=stacked.positions,
+                        velocities=stacked.velocities,
+                        forces=stacked.forces, step=stacked.step,
+                        rng=stacked.rng,
+                        ladder=jnp.asarray(ladder, jnp.int32))
+
+
+def replica_state(state: ReplicaState, r: int) -> MDState:
+    """Extract replica ``r`` as a plain single-trajectory ``MDState``."""
+    return MDState(positions=state.positions[r],
+                   velocities=state.velocities[r],
+                   forces=state.forces[r], step=state.step[r],
+                   rng=state.rng[r])

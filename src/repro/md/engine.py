@@ -75,7 +75,18 @@ class MDEngine:
     bit-exactly (deterministic integrator + stored RNG), and the *virtual*
     decomposition in repro.core means restart works at any device count —
     the decoupling argument from the paper.
+
+    The window machinery (fused-scan segments, displacement-triggered
+    rebuild conds, grow-and-replay on overflow, observe/checkpoint cadence)
+    is shared with the replica-batched ``repro.ensemble.EnsembleEngine``:
+    every per-trajectory flag is shaped ``_batch_shape`` (``()`` here,
+    ``(R,)`` there), host decisions reduce with any()/sum(), and the
+    rebuild check / integrator / observation packaging are overridable
+    hooks.
     """
+
+    _batch_shape: tuple = ()        # leading shape of per-trajectory flags
+    _extra_boundary_every: int = 0  # extra host boundary (replica exchange)
 
     def __init__(self, system: System, config: EngineConfig,
                  special_force: Optional[ForceProvider] = None):
@@ -98,26 +109,31 @@ class MDEngine:
 
     # -- construction ------------------------------------------------------
 
+    def _classical_one(self, pos, nlist):
+        """Single-trajectory classical forces — the one definition both the
+        scalar engine and the vmapped ensemble engine build on."""
+        e, g = jax.value_and_grad(classical_energy)(
+            pos, self.system, nlist, self.config.ff, True)
+        return e, -g
+
+    def _integrate_one(self, state: MDState, f, thermostat_t):
+        """Single-trajectory leapfrog + optional Berendsen rescale toward
+        ``thermostat_t`` (None disables; the ensemble engine passes each
+        replica's ladder temperature)."""
+        cfg = self.config
+        new = leapfrog_step(state, f, self.system.masses, self.system.box,
+                            cfg.dt)
+        if thermostat_t is not None:
+            v = berendsen_rescale(new.velocities, self.system.masses,
+                                  thermostat_t, cfg.dt, cfg.thermostat_tau)
+            new = dataclasses.replace(new, velocities=v)
+        return new
+
     def _build_fns(self):
         cfg = self.config
-        system = self.system
-
-        def classical_fn(pos, nlist):
-            e, g = jax.value_and_grad(classical_energy)(
-                pos, system, nlist, cfg.ff, True)
-            return e, -g
-
-        def integrate_fn(state: MDState, f):
-            new = leapfrog_step(state, f, system.masses, system.box, cfg.dt)
-            if cfg.thermostat_t is not None:
-                v = berendsen_rescale(new.velocities, system.masses,
-                                      cfg.thermostat_t, cfg.dt,
-                                      cfg.thermostat_tau)
-                new = dataclasses.replace(new, velocities=v)
-            return new
-
-        self._classical_fn = jax.jit(classical_fn)
-        self._integrate_fn = jax.jit(integrate_fn)
+        self._classical_fn = jax.jit(self._classical_one)
+        self._integrate_fn = jax.jit(
+            lambda state, f: self._integrate_one(state, f, cfg.thermostat_t))
 
     def _step_parts(self, state: MDState, nlist: NeighborList, sp_state):
         """One step from already-valid lists: the shared scan/step core.
@@ -129,13 +145,13 @@ class MDEngine:
         system = self.system
         special = self.special_force
 
-        rb = needs_rebuild(nlist, state.positions, system.box, cfg.skin)
-        nlist = jax.lax.cond(rb, lambda p, nl: self.build_nlist(p),
+        rb = self._check_rebuild(nlist, state.positions)
+        nlist = jax.lax.cond(jnp.any(rb), lambda p, nl: self.build_nlist(p),
                              lambda p, nl: nl, state.positions, nlist)
         e_cl, f = self._classical_fn(state.positions, nlist)
-        e_sp = jnp.zeros((), f.dtype)
-        sp_rb = jnp.zeros((), bool)
-        sp_ovf = jnp.zeros((), bool)
+        e_sp = jnp.zeros(self._batch_shape, f.dtype)
+        sp_rb = jnp.zeros(self._batch_shape, bool)
+        sp_ovf = jnp.zeros(self._batch_shape, bool)
         if special is not None:
             if self._stateful:
                 # evaluate first: the displacement check comes out of the
@@ -154,12 +170,17 @@ class MDEngine:
                     return s, e_sp, f_sp, fl["overflow"]
 
                 sp_state, e_sp, f_sp, sp_ovf = jax.lax.cond(
-                    sp_rb, rebuilt, kept, state.positions, sp_state)
+                    jnp.any(sp_rb), rebuilt, kept, state.positions, sp_state)
             else:
                 e_sp, f_sp = special(state.positions, system.box)
             f = f + f_sp
         new = self._integrate_fn(state, f)
         return new, nlist, sp_state, e_cl, e_sp, rb, sp_rb, sp_ovf
+
+    def _check_rebuild(self, nlist: NeighborList, positions) -> jax.Array:
+        """Displacement-triggered rebuild flag(s), shaped ``_batch_shape``."""
+        return needs_rebuild(nlist, positions, self.system.box,
+                             self.config.skin)
 
     def _window_fn(self, k: int) -> Callable:
         """Jitted ``lax.scan`` over ``k`` fused steps (cached per length)."""
@@ -179,11 +200,12 @@ class MDEngine:
             return (state, nlist, sp_state, flags, e_cl, e_sp), None
 
         def run_window(state, nlist, sp_state):
-            flags = {"rebuilds": jnp.zeros((), jnp.int32),
-                     "sp_rebuilds": jnp.zeros((), jnp.int32),
-                     "nlist_overflow": jnp.zeros((), bool),
-                     "sp_overflow": jnp.zeros((), bool)}
-            zero = jnp.zeros(())
+            bs = self._batch_shape
+            flags = {"rebuilds": jnp.zeros(bs, jnp.int32),
+                     "sp_rebuilds": jnp.zeros(bs, jnp.int32),
+                     "nlist_overflow": jnp.zeros(bs, bool),
+                     "sp_overflow": jnp.zeros(bs, bool)}
+            zero = jnp.zeros(bs)
             carry = (state, nlist, sp_state, flags, zero, zero)
             carry, _ = jax.lax.scan(body, carry, None, length=k)
             return carry
@@ -227,7 +249,7 @@ class MDEngine:
         """Build the classical list, doubling capacity until it fits."""
         while True:
             nlist = self.build_nlist(positions)
-            if not bool(nlist.overflow):
+            if not bool(jnp.any(nlist.overflow)):
                 return nlist
             self._grow_neighbor_capacity()
 
@@ -237,7 +259,7 @@ class MDEngine:
         special = self.special_force
         for _ in range(self.config.max_capacity_growths + 1):
             sp_state = special.assemble(positions)
-            if not bool(special.state_overflow(sp_state)):
+            if not bool(jnp.any(special.state_overflow(sp_state))):
                 return sp_state
             special.grow()
             self.diagnostics["special_growths"] += 1
@@ -255,6 +277,9 @@ class MDEngine:
         ends = [n_steps]
         re = cfg.rebuild_every
         ends.append((i // re + 1) * re)
+        if self._extra_boundary_every:
+            ee = self._extra_boundary_every
+            ends.append((i // ee + 1) * ee)
         if observing:
             # observation happens after relative steps 1, 1+obs, 1+2*obs, ...
             ends.append(i + 1 if i % observe_every == 0
@@ -274,11 +299,14 @@ class MDEngine:
              e_sp) = self._window_fn(k)(*start)
             jax.block_until_ready(state.positions)
             self.timings["scan"] += time.perf_counter() - t0
-            nlist_ovf = bool(flags["nlist_overflow"])
-            sp_ovf = bool(flags["sp_overflow"])
+            nlist_ovf = bool(jnp.any(flags["nlist_overflow"]))
+            sp_ovf = bool(jnp.any(flags["sp_overflow"]))
             if not nlist_ovf and not sp_ovf:
-                self.diagnostics["displacement_rebuilds"] += int(flags["rebuilds"])
-                self.diagnostics["special_rebuilds"] += int(flags["sp_rebuilds"])
+                # batched engines count per-trajectory triggers (replica-steps)
+                self.diagnostics["displacement_rebuilds"] += int(
+                    jnp.sum(flags["rebuilds"]))
+                self.diagnostics["special_rebuilds"] += int(
+                    jnp.sum(flags["sp_rebuilds"]))
                 return state, nlist, sp_state, e_cl, e_sp
             # grow whichever capacity overflowed, restore the window's start
             # state, and replay the window — correctness over throughput on
@@ -300,11 +328,10 @@ class MDEngine:
         cfg = self.config
         system = self.system
         special = self.special_force
-        e_cl = e_sp = jnp.zeros(())
+        e_cl = e_sp = jnp.zeros(self._batch_shape)
         for _ in range(k):
             t0 = time.perf_counter()
-            if bool(needs_rebuild(nlist, state.positions, system.box,
-                                  cfg.skin)):
+            if bool(jnp.any(self._check_rebuild(nlist, state.positions))):
                 nlist = self._build_nlist_grown(state.positions)
                 self.diagnostics["displacement_rebuilds"] += 1
             jax.block_until_ready(nlist.idx)
@@ -320,13 +347,13 @@ class MDEngine:
                 if self._stateful:
                     e_sp, f_sp, fl = special.evaluate(state.positions,
                                                       sp_state)
-                    if bool(fl["needs_rebuild"]):
+                    if bool(jnp.any(fl["needs_rebuild"])):
                         sp_state = self._assemble_special_grown(
                             state.positions)
                         self.diagnostics["special_rebuilds"] += 1
                         e_sp, f_sp, fl = special.evaluate(state.positions,
                                                           sp_state)
-                    while bool(fl["overflow"]):
+                    while bool(jnp.any(fl["overflow"])):
                         # evaluation-side overflow (e.g. k_eval trim): grow
                         # and recompute — mirrors the scan path's replay
                         special.grow()
@@ -376,7 +403,7 @@ class MDEngine:
                 self.diagnostics["cadence_rebuilds"] += 1
                 self.timings["neighbor"] += time.perf_counter() - t0
 
-            k = self._segment_len(i, int(state.step), n_steps,
+            k = self._segment_len(i, self._abs_step(state), n_steps,
                                   observe is not None, observe_every)
             if cfg.loop_mode == "step":
                 state, nlist, sp_state, e_cl, e_sp = self._run_segment_step(
@@ -385,21 +412,33 @@ class MDEngine:
                 state, nlist, sp_state, e_cl, e_sp = self._run_segment_scan(
                     state, nlist, sp_state, k)
             i += k
+            state = self._post_segment(state, e_cl, e_sp, i)
 
             if observe is not None and (i - 1) % observe_every == 0:
-                obs = {
-                    "step": int(state.step),
-                    "e_classical": float(e_cl),
-                    "e_special": float(e_sp),
-                    "temperature": float(observables.temperature(
-                        state.velocities, self.system.masses)),
-                }
-                observe(state, obs)
+                observe(state, self._observation(state, e_cl, e_sp))
 
             if (cfg.checkpoint_every and cfg.checkpoint_path
-                    and int(state.step) % cfg.checkpoint_every == 0):
+                    and self._abs_step(state) % cfg.checkpoint_every == 0):
                 self.checkpoint(state, cfg.checkpoint_path)
         return state
+
+    # -- batched-engine hooks (overridden by repro.ensemble) ---------------
+
+    def _abs_step(self, state) -> int:
+        return int(state.step)
+
+    def _post_segment(self, state, e_cl, e_sp, i: int):
+        """Host boundary between fused windows (replica exchange hook)."""
+        return state
+
+    def _observation(self, state, e_cl, e_sp) -> dict:
+        return {
+            "step": self._abs_step(state),
+            "e_classical": float(e_cl),
+            "e_special": float(e_sp),
+            "temperature": float(observables.temperature(
+                state.velocities, self.system.masses)),
+        }
 
     # -- fault tolerance ----------------------------------------------------
 

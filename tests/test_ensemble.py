@@ -1,0 +1,261 @@
+"""Ensemble subsystem acceptance properties (single-device fast set):
+
+* the jit-safe exchange move: Metropolis limits (always-accept at equal
+  temperatures, never-accept for an enormous penalty), ladder-permutation
+  invariance, per-replica PRNG determinism, velocity rescaling;
+* an R-replica batched run with exchange disabled is trajectory-equivalent
+  to R independent ``MDEngine`` runs with the same per-replica seeds and
+  temperatures (the tentpole acceptance criterion);
+* the R=2 CI smoke: tiny system, exchange on, acceptance sanity;
+* single-replica regression guard: the refactored window machinery keeps
+  the scalar engine's behavior (covered further by test_engine_scan.py).
+
+Multi-device (replica x dd mesh) coverage lives in test_ensemble_dd.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.dp import DPModel, paper_dpa1_config
+from repro.ensemble import (BatchedDeepmdProvider, EnsembleConfig,
+                            EnsembleEngine, ReplicaState, geometric_ladder,
+                            make_exchange_fn, replica_state, stack_states)
+from repro.md import (EngineConfig, MDEngine, build_solvated_protein,
+                      mark_nn_group)
+from repro.md.system import KB
+
+
+# ---------------------------------------------------------------------------
+# exchange move unit tests
+# ---------------------------------------------------------------------------
+
+def _mk_state(r, n=4, seed=0):
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(seed, seed + r))
+    return ReplicaState(
+        positions=jnp.zeros((r, n, 3)), velocities=jnp.ones((r, n, 3)),
+        forces=jnp.zeros((r, n, 3)), step=jnp.zeros(r, jnp.int32),
+        rng=keys, ladder=jnp.arange(r, dtype=jnp.int32))
+
+
+def test_exchange_always_accepts_at_equal_temps():
+    ex = make_exchange_fn(jnp.full(4, 300.0))
+    st = _mk_state(4)
+    e = jnp.asarray([10.0, -5.0, 3.0, 7.0])
+    st1, stats = ex(st, e, jnp.int32(0))
+    assert int(stats["attempted"]) == 2          # rung pairs (0,1) and (2,3)
+    assert int(stats["accepted"]) == 2           # delta = 0 -> P = 1
+    assert sorted(np.asarray(st1.ladder).tolist()) == [0, 1, 2, 3]
+    # swapped rungs at equal temperature leave velocities unscaled
+    assert bool((st1.velocities == st.velocities).all())
+
+
+def test_exchange_rejects_enormous_penalty():
+    """beta gap * energy gap << 0 -> acceptance probability ~ exp(-1e6)."""
+    ex = make_exchange_fn(jnp.asarray([10.0, 1000.0]))
+    st = _mk_state(2)
+    e = jnp.asarray([-1e4, 1e4])                 # cold replica far lower
+    st1, stats = ex(st, e, jnp.int32(0))
+    assert int(stats["attempted"]) == 1
+    assert int(stats["accepted"]) == 0
+    assert np.asarray(st1.ladder).tolist() == [0, 1]
+
+
+def test_exchange_metropolis_sign():
+    """A swap that lowers beta*E (cold replica holds the *higher* energy)
+    has delta > 0 and must always be accepted."""
+    temps = jnp.asarray([200.0, 400.0])
+    ex = make_exchange_fn(temps)
+    st = _mk_state(2)
+    e = jnp.asarray([100.0, -100.0])             # E_cold > E_hot
+    beta = 1.0 / (KB * np.asarray(temps))
+    assert (beta[0] - beta[1]) * (100.0 - (-100.0)) > 0
+    st1, stats = ex(st, e, jnp.int32(0))
+    assert int(stats["accepted"]) == 1
+    assert np.asarray(st1.ladder).tolist() == [1, 0]
+    # temperature-swap convention: velocities rescale by sqrt(T_new/T_old)
+    scale = np.asarray(st1.velocities / st.velocities)
+    assert np.allclose(scale[0], np.sqrt(400.0 / 200.0), atol=1e-6)
+    assert np.allclose(scale[1], np.sqrt(200.0 / 400.0), atol=1e-6)
+
+
+def test_exchange_deterministic_streams():
+    """Same seeds -> identical accept/reject sequence; every replica's
+    stream advances on every attempt, paired or not."""
+    ex = make_exchange_fn(jnp.asarray(geometric_ladder(300.0, 400.0, 3)))
+    e = jnp.asarray([5.0, 1.0, -3.0])
+    outs = []
+    for _ in range(2):
+        st = _mk_state(3, seed=11)
+        for attempt in range(4):
+            st, stats = ex(st, e, jnp.int32(attempt % 2))
+        outs.append((np.asarray(st.ladder), np.asarray(st.rng)))
+    assert (outs[0][0] == outs[1][0]).all()
+    assert (outs[0][1] == outs[1][1]).all()
+    st0 = _mk_state(3, seed=11)
+    assert not (np.asarray(st0.rng) == outs[0][1]).all()
+
+
+def test_geometric_ladder():
+    t = geometric_ladder(300.0, 600.0, 4)
+    assert len(t) == 4 and t[0] == 300.0 and abs(t[-1] - 600.0) < 1e-9
+    r = np.diff(np.log(t))
+    assert np.allclose(r, r[0])
+
+
+# ---------------------------------------------------------------------------
+# engine-level properties
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small_system():
+    system, pos, nn_idx = build_solvated_protein(5, water_per_protein_atom=1.5)
+    system = mark_nn_group(system, nn_idx)
+    model = DPModel(paper_dpa1_config(ntypes=4, rcut=0.6, sel=32))
+    params = model.init_params(jax.random.PRNGKey(0))
+    return system, pos, nn_idx, model, params
+
+
+_CFG = dict(cutoff=0.9, neighbor_capacity=96, dt=0.0005)
+
+
+def test_ensemble_matches_independent_runs_classical(small_system):
+    """Tentpole acceptance: batched R-replica run (exchange off) ==
+    R independent MDEngine runs, same seeds/temperatures — classical path."""
+    system, pos = small_system[0], small_system[1]
+    temps = (250.0, 300.0, 350.0)
+    ind = []
+    for r, t in enumerate(temps):
+        eng = MDEngine(system, EngineConfig(thermostat_t=t, **_CFG))
+        ind.append(eng.run(eng.init_state(pos, t, seed=r), 10))
+    eeng = EnsembleEngine(system, EngineConfig(thermostat_t=300.0, **_CFG),
+                          EnsembleConfig(n_replicas=3, temps=temps))
+    st = eeng.run(eeng.init_state(pos), 10)
+    for r in range(3):
+        d = float(jnp.abs(st.positions[r] - ind[r].positions).max())
+        assert d <= 1e-6, (r, d)
+        assert int(st.step[r]) == int(ind[r].step) == 10
+
+
+def test_ensemble_smoke_with_exchange(small_system):
+    """CI smoke: R=2, tiny system, DP special force, exchange acceptance
+    sanity (near-equal rungs must accept nearly every attempt)."""
+    system, pos, nn_idx, model, params = small_system
+    prov = BatchedDeepmdProvider(model, params, nn_idx, system.types,
+                                 system.box, system.n_atoms, n_replicas=2,
+                                 nbr_capacity=48, skin=0.08)
+    assert prov.stateful
+    ens = EnsembleConfig(n_replicas=2, temps=(300.0, 301.0),
+                         exchange_interval=2)
+    eeng = EnsembleEngine(system, EngineConfig(thermostat_t=300.0, **_CFG),
+                          ens, special_force=prov)
+    st = eeng.run(eeng.init_state(pos), 8)
+    assert bool(jnp.isfinite(st.positions).all())
+    d = eeng.diagnostics
+    assert d["exchange_attempts"] >= 2
+    # a 1 K gap on a tiny system: delta ~ 0 -> acceptance ~ 1
+    assert d["exchange_accepts"] >= d["exchange_attempts"] - 1
+    assert sorted(np.asarray(st.ladder).tolist()) == [0, 1]
+    assert d["pair_attempts"].sum() == d["exchange_attempts"]
+
+
+@pytest.mark.slow
+def test_ensemble_matches_independent_runs_dp(small_system):
+    """Tentpole acceptance with the stateful (skin > 0) single-domain DP
+    provider: batched == independent, per replica."""
+    system, pos, nn_idx, model, params = small_system
+    temps = (250.0, 330.0)
+
+    def mk_single():
+        from repro.core import DeepmdForceProvider
+        return DeepmdForceProvider(model, params, nn_idx, system.types,
+                                   system.box, system.n_atoms,
+                                   nbr_capacity=48, skin=0.08)
+
+    ind = []
+    for r, t in enumerate(temps):
+        eng = MDEngine(system, EngineConfig(thermostat_t=t, **_CFG),
+                       special_force=mk_single())
+        ind.append(eng.run(eng.init_state(pos, t, seed=r), 8))
+    bprov = BatchedDeepmdProvider(model, params, nn_idx, system.types,
+                                  system.box, system.n_atoms, n_replicas=2,
+                                  nbr_capacity=48, skin=0.08)
+    eeng = EnsembleEngine(system, EngineConfig(thermostat_t=300.0, **_CFG),
+                          EnsembleConfig(n_replicas=2, temps=temps),
+                          special_force=bprov)
+    st = eeng.run(eeng.init_state(pos), 8)
+    for r in range(2):
+        d = float(jnp.abs(st.positions[r] - ind[r].positions).max())
+        assert d <= 1e-5, (r, d)
+
+
+def test_ensemble_step_mode_matches_scan(small_system):
+    """The per-step host loop drives the batched engine too, with the same
+    trajectories and (R,)-shaped observations."""
+    system, pos = small_system[0], small_system[1]
+    temps = (250.0, 330.0)
+    runs, seen = {}, {}
+    for mode in ["scan", "step"]:
+        eeng = EnsembleEngine(
+            system, EngineConfig(thermostat_t=300.0, loop_mode=mode, **_CFG),
+            EnsembleConfig(n_replicas=2, temps=temps))
+        obs = []
+        runs[mode] = eeng.run(eeng.init_state(pos), 8,
+                              observe=lambda s, o: obs.append(o),
+                              observe_every=4)
+        seen[mode] = obs
+    d = float(jnp.abs(runs["scan"].positions - runs["step"].positions).max())
+    assert d <= 1e-6, d
+    for mode in ["scan", "step"]:
+        assert seen[mode][-1]["e_special"].shape == (2,)
+        assert seen[mode][-1]["temperature"].shape == (2,)
+
+
+def test_init_state_rejects_scalar_seed(small_system):
+    system, pos = small_system[0], small_system[1]
+    eeng = EnsembleEngine(system, EngineConfig(thermostat_t=300.0, **_CFG),
+                          EnsembleConfig(n_replicas=2, temps=(250.0, 300.0)))
+    with pytest.raises(TypeError, match="per-replica"):
+        eeng.init_state(pos, 300.0)
+
+
+def test_replica_state_stack_unstack(small_system):
+    system, pos = small_system[0], small_system[1]
+    eng = MDEngine(system, EngineConfig(thermostat_t=300.0, **_CFG))
+    singles = [eng.init_state(pos, 300.0, seed=r) for r in range(3)]
+    st = stack_states(singles)
+    assert st.n_replicas == 3
+    for r in range(3):
+        back = replica_state(st, r)
+        assert bool((back.velocities == singles[r].velocities).all())
+
+
+def test_ensemble_checkpoint_restore(small_system, tmp_path):
+    system, pos = small_system[0], small_system[1]
+    path = str(tmp_path / "ens_ck")
+    ens = EnsembleConfig(n_replicas=2, temps=(280.0, 320.0),
+                         exchange_interval=3)
+    eeng = EnsembleEngine(
+        system, EngineConfig(thermostat_t=300.0, checkpoint_every=4,
+                             checkpoint_path=path, **_CFG), ens)
+    st = eeng.run(eeng.init_state(pos), 8)
+    restored = EnsembleEngine.restore(path)
+    assert isinstance(restored, ReplicaState)
+    assert restored.positions.shape == st.positions.shape
+    assert int(restored.step[0]) % 4 == 0
+    assert sorted(np.asarray(restored.ladder).tolist()) == [0, 1]
+
+
+def test_ensemble_capacity_growth(small_system):
+    """Undersized classical capacity in the batched engine grows and
+    replays instead of raising (per-replica overflow flags reduced on
+    the host) — the grow-and-replay satellite, batched."""
+    system, pos = small_system[0], small_system[1]
+    eeng = EnsembleEngine(
+        system, EngineConfig(cutoff=0.9, neighbor_capacity=2, dt=0.0005,
+                             thermostat_t=200.0),
+        EnsembleConfig(n_replicas=2, temps=(200.0, 220.0)))
+    st = eeng.run(eeng.init_state(pos), 4)
+    assert bool(jnp.isfinite(st.positions).all())
+    assert eeng.diagnostics["capacity_growths"]
+    assert eeng.config.neighbor_capacity > 2

@@ -1,0 +1,183 @@
+"""Replica-batched distributed DP inference on a 2-D (replica x dd) mesh.
+
+* fused batched forces on a (2, 4) mesh match the single-domain oracle per
+  replica, and pure-vmap batching on a (1, 8) mesh is bitwise-equal to
+  looping the unbatched dd-8 driver over replicas (one batched collective
+  pair == R sequential pairs, exactly);
+* the amortized batched assembly/evaluation split keeps *per-replica*
+  rebuild flags: drifting one replica beyond skin/2 trips only its flag;
+* (slow) the EnsembleEngine driving the batched distributed provider
+  reproduces independent MDEngine runs with the same per-replica dd layout.
+
+Multi-device execution requires forced host devices, so these run in a
+subprocess (tests proper must see one device).
+"""
+import json
+
+import pytest
+
+from conftest import run_in_subprocess
+
+_BATCHED_DD_CODE = r"""
+import json
+import jax, jax.numpy as jnp, numpy as np
+from repro.dp import DPModel, paper_dpa1_config
+from repro.core import (suggest_config, make_distributed_force_fn,
+                        make_batched_force_fn, make_batched_assembly_fn,
+                        make_batched_evaluation_fn, make_batched_check_fn,
+                        single_domain_forces)
+from repro.ensemble import make_ensemble_mesh
+from repro.launch.mesh import make_dd_mesh
+
+rng = np.random.default_rng(7)
+n, L, R = 160, 3.5, 2
+box = np.array([L] * 3, np.float32)
+coords = jnp.asarray(rng.uniform(0, L, (R, n, 3)).astype(np.float32))
+types = jnp.asarray(rng.integers(0, 4, n), jnp.int32)
+model = DPModel(paper_dpa1_config(ntypes=4, rcut=0.6, sel=48))
+params = model.init_params(jax.random.PRNGKey(0))
+out = {}
+
+# replica-parallel: (replica=2, dd=4) vs the single-domain oracle
+mesh24 = make_ensemble_mesh(2, 4)
+cfg4 = suggest_config(n, box, 4, 0.6, nbr_capacity=64, slack=2.5,
+                      coords=np.asarray(coords[0]))
+e_b, f_b, diag = make_batched_force_fn(model, cfg4, mesh24, box, n, R)(
+    params, coords, types)
+out["mesh24_overflow"] = np.asarray(diag["overflow"]).tolist()
+out["mesh24_cost_ratio"] = np.asarray(diag["cost_ratio"]).tolist()
+dfs = []
+for r in range(R):
+    e_r, f_r = single_domain_forces(model, params, coords[r], types, box, 64)
+    dfs.append(float(jnp.abs(f_b[r] - f_r).max()))
+out["mesh24_df_single"] = dfs
+
+# pure vmap batching: (replica=1, dd=8) must equal looping the unbatched
+# dd-8 driver over replicas, bitwise
+mesh18 = make_ensemble_mesh(1, 8)
+cfg8 = suggest_config(n, box, 8, 0.6, nbr_capacity=64, slack=2.5,
+                      coords=np.asarray(coords[0]))
+e_v, f_v, _ = make_batched_force_fn(model, cfg8, mesh18, box, n, R)(
+    params, coords, types)
+fused8 = make_distributed_force_fn(model, cfg8, make_dd_mesh(8), box, n)
+bitwise = True
+for r in range(R):
+    e_r, f_r, _ = fused8(params, coords[r], types)
+    bitwise &= bool((f_v[r] == f_r).all()) and float(e_v[r]) == float(e_r)
+out["vmap_bitwise_vs_looped"] = bitwise
+
+# amortized split with per-replica rebuild flags
+SKIN = 0.05
+cfgS = suggest_config(n, box, 4, 0.6, nbr_capacity=64, slack=2.5, skin=SKIN,
+                      coords=np.asarray(coords[0]))
+asm = make_batched_assembly_fn(model, cfgS, mesh24, box, n, R)
+ev = make_batched_evaluation_fn(model, cfgS, mesh24, box, n, R)
+chk = make_batched_check_fn(cfgS, mesh24, box, n, R)
+st = asm(coords, types)
+out["asm_overflow"] = np.asarray(st.overflow).tolist()
+_, f0, d0 = ev(params, coords, st)
+out["fresh_needs_rebuild"] = np.asarray(d0["needs_rebuild"]).tolist()
+fb = make_batched_force_fn(model, cfgS, mesh24, box, n, R)(
+    params, coords, types)[1]
+out["eval_bitwise_fused"] = bool((f0 == fb).all())
+# replica 1 drifts beyond skin/2; replica 0 stays put
+c1 = jnp.mod(coords.at[1].add(jnp.asarray(
+    rng.normal(0, 0.08, (n, 3)).astype(np.float32))), jnp.asarray(box))
+out["check_per_replica"] = np.asarray(chk(c1, st)).tolist()
+_, _, d1 = ev(params, c1, st)
+out["eval_per_replica_rebuild"] = np.asarray(d1["needs_rebuild"]).tolist()
+print("JSON" + json.dumps(out))
+"""
+
+
+_ENGINE_ENSEMBLE_DD_CODE = r"""
+import json
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import DeepmdForceProvider, suggest_config
+from repro.dp import DPModel, paper_dpa1_config
+from repro.ensemble import (BatchedDeepmdProvider, EnsembleConfig,
+                            EnsembleEngine, make_ensemble_mesh)
+from repro.launch.mesh import make_dd_mesh
+from repro.md import (EngineConfig, MDEngine, build_solvated_protein,
+                      mark_nn_group)
+
+system, pos, nn_idx = build_solvated_protein(6, water_per_protein_atom=1.5)
+system = mark_nn_group(system, nn_idx)
+model = DPModel(paper_dpa1_config(ntypes=4, rcut=0.6, sel=32))
+params = model.init_params(jax.random.PRNGKey(0))
+R = 2
+temps = (220.0, 260.0)
+cfg = dict(cutoff=0.9, neighbor_capacity=96, dt=0.0005)
+mkdd = lambda: suggest_config(len(nn_idx), np.asarray(system.box), 4, 0.6,
+                              nbr_capacity=48, slack=2.5, skin=0.04,
+                              force_mode="ghost_reduce",
+                              coords=np.asarray(pos)[np.asarray(nn_idx)])
+ind = []
+for r in range(R):
+    prov = DeepmdForceProvider(model, params, nn_idx, system.types,
+                               system.box, system.n_atoms, dd_config=mkdd(),
+                               mesh=make_dd_mesh(4))
+    eng = MDEngine(system, EngineConfig(thermostat_t=temps[r], **cfg),
+                   special_force=prov)
+    ind.append(eng.run(eng.init_state(pos, temps[r], seed=r), 6))
+
+bprov = BatchedDeepmdProvider(model, params, nn_idx, system.types,
+                              system.box, system.n_atoms, n_replicas=R,
+                              dd_config=mkdd(), mesh=make_ensemble_mesh(2, 4))
+assert bprov.stateful
+eeng = EnsembleEngine(system, EngineConfig(thermostat_t=300.0, **cfg),
+                      EnsembleConfig(n_replicas=R, temps=temps),
+                      special_force=bprov)
+st = eeng.run(eeng.init_state(pos), 6)
+pos_b = np.asarray(st.positions)   # the two runs live on different meshes:
+out = {"finite": bool(np.isfinite(pos_b).all()),
+       "steps": np.asarray(st.step).tolist(),
+       "max_dx": [float(np.abs(pos_b[r] - np.asarray(ind[r].positions)).max())
+                  for r in range(R)]}
+print("JSON" + json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def batched_dd_results():
+    stdout = run_in_subprocess(_BATCHED_DD_CODE, n_devices=8)
+    line = [l for l in stdout.splitlines() if l.startswith("JSON")][0]
+    return json.loads(line[4:])
+
+
+def test_batched_matches_single_domain(batched_dd_results):
+    r = batched_dd_results
+    assert r["mesh24_overflow"] == [0, 0]
+    assert all(df < 1e-4 for df in r["mesh24_df_single"]), r
+    assert all(c >= 1.0 for c in r["mesh24_cost_ratio"])
+
+
+def test_vmap_batching_bitwise_equals_looped(batched_dd_results):
+    """One batched collective pair == R sequential pairs, exactly."""
+    assert batched_dd_results["vmap_bitwise_vs_looped"]
+
+
+def test_batched_assembly_evaluation_split(batched_dd_results):
+    r = batched_dd_results
+    assert r["asm_overflow"] == [0, 0]
+    assert r["fresh_needs_rebuild"] == [False, False]
+    assert r["eval_bitwise_fused"]
+
+
+def test_per_replica_rebuild_flags(batched_dd_results):
+    """Drifting one replica past skin/2 trips only that replica's flag."""
+    r = batched_dd_results
+    assert r["check_per_replica"] == [False, True]
+    assert r["eval_per_replica_rebuild"] == [False, True]
+
+
+@pytest.mark.slow
+def test_ensemble_engine_with_distributed_provider():
+    """Full integration: EnsembleEngine + batched distributed provider on a
+    (2, 4) mesh reproduces two independent dd-4 MDEngine runs."""
+    stdout = run_in_subprocess(_ENGINE_ENSEMBLE_DD_CODE, n_devices=8)
+    line = [l for l in stdout.splitlines() if l.startswith("JSON")][0]
+    r = json.loads(line[4:])
+    assert r["finite"]
+    assert r["steps"] == [6, 6]
+    assert all(d <= 1e-5 for d in r["max_dx"]), r

@@ -1,0 +1,126 @@
+"""Satellite: ``partition_costs`` parity with actual assembly counts.
+
+The (P,) Eq.-8 cost vector must equal the local+ghost counts the per-rank
+assembly really produces — on both the dense and the cell-list paths, for
+random and clustered configurations — and ``atom_costs`` must be the same
+model attributed back to atoms.  Plus the ``rebalance`` feedback knob:
+planes re-derived from measured costs must collapse the clustered-system
+imbalance that uniform grids suffer.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (atom_costs, partition_costs, suggest_config,
+                        uniform_grid)
+from repro.core.ddinfer import _assemble_rank, _make_grid
+
+RCUT = 0.6
+N_RANKS = 8
+
+
+def _random_config(rng, n=220, L=5.0):
+    return np.asarray(rng.uniform(0, L, (n, 3)), np.float32), L
+
+
+def _clustered_config(rng, n=400, L=8.0):
+    blob = rng.normal(L / 4, 0.5, (3 * n // 4, 3))
+    bg = rng.uniform(0, L, (n - 3 * n // 4, 3))
+    return np.mod(np.concatenate([blob, bg]), L).astype(np.float32), L
+
+
+def _grids(coords, box, cfg):
+    box_j = jnp.asarray(box)
+    return {
+        "uniform": uniform_grid(box_j, cfg.grid_dims),
+        "balanced": _make_grid(jnp.asarray(coords), box_j,
+                               dataclasses.replace(cfg, balanced=True),
+                               len(coords)),
+        "rebalanced": _make_grid(jnp.asarray(coords), box_j,
+                                 dataclasses.replace(cfg, rebalance=True),
+                                 len(coords)),
+    }
+
+
+@pytest.mark.parametrize("config", ["random", "clustered"])
+@pytest.mark.parametrize("nbr_method", ["dense", "cells"])
+@pytest.mark.parametrize("grid_mode", ["uniform", "balanced", "rebalanced"])
+def test_partition_costs_match_assembly_counts(rng, config, nbr_method,
+                                               grid_mode):
+    coords_h, L = (_random_config(rng) if config == "random"
+                   else _clustered_config(rng))
+    n = len(coords_h)
+    box = np.array([L] * 3, np.float32)
+    # the cell path's static region extents must be sized for the grid mode
+    # actually used (moving planes shrink/stretch slabs)
+    cfg = suggest_config(n, box, N_RANKS, RCUT, nbr_capacity=64, slack=2.5,
+                         balanced=grid_mode == "balanced",
+                         rebalance=grid_mode == "rebalanced",
+                         force_mode="ghost_reduce", nbr_method=nbr_method,
+                         coords=coords_h)
+    coords = jnp.asarray(coords_h)
+    types = jnp.asarray(np.zeros(n, np.int32))
+    grid = _grids(coords_h, box, cfg)[grid_mode]
+    costs = np.asarray(partition_costs(coords, box, grid, cfg.halo_eff))
+    for rank in range(N_RANKS):
+        st = _assemble_rank(coords, types, jnp.asarray(box), grid, cfg,
+                            RCUT, jnp.int32(rank), n)
+        produced = int(st["local_count"]) + int(st["ghost_count"])
+        assert produced == int(costs[rank]), (grid_mode, rank)
+
+
+@pytest.mark.parametrize("config", ["random", "clustered"])
+def test_atom_costs_total_matches_partition_costs(rng, config):
+    coords_h, L = (_random_config(rng) if config == "random"
+                   else _clustered_config(rng))
+    box = np.array([L] * 3, np.float32)
+    cfg = suggest_config(len(coords_h), box, N_RANKS, RCUT, nbr_capacity=64,
+                         slack=2.5, force_mode="ghost_reduce",
+                         coords=coords_h)
+    coords = jnp.asarray(coords_h)
+    for grid in _grids(coords_h, box, cfg).values():
+        per_atom = atom_costs(coords, box, grid, cfg.halo_eff)
+        per_rank = partition_costs(coords, box, grid, cfg.halo_eff)
+        assert int(per_atom.sum()) == int(per_rank.sum())
+
+
+def test_rebalance_collapses_clustered_imbalance(rng):
+    """Satellite acceptance: cost-weighted planes must take the max/mean
+    per-rank cost ratio far below the uniform grid's on a clustered
+    system (the paper's dominant-bottleneck scenario)."""
+    coords_h, L = _clustered_config(rng)
+    box = np.array([L] * 3, np.float32)
+    cfg = suggest_config(len(coords_h), box, N_RANKS, RCUT, nbr_capacity=64,
+                         slack=2.5, force_mode="ghost_reduce",
+                         coords=coords_h)
+    grids = _grids(coords_h, box, cfg)
+    coords = jnp.asarray(coords_h)
+
+    def ratio(grid):
+        c = np.asarray(partition_costs(coords, box, grid, cfg.halo_eff))
+        return c.max() / c.mean()
+
+    r_uniform, r_reb = ratio(grids["uniform"]), ratio(grids["rebalanced"])
+    assert r_uniform > 2.0          # the clustered config really is skewed
+    assert r_reb < 0.5 * r_uniform  # feedback planes collapse the skew
+    assert r_reb < 1.6
+
+
+def test_rebalanced_planes_are_valid(rng):
+    """Weighted-quantile planes stay monotone, inside the box, and respect
+    the same min-width clamp as the count-quantile ones."""
+    coords_h, L = _clustered_config(rng)
+    box = np.array([L] * 3, np.float32)
+    cfg = suggest_config(len(coords_h), box, N_RANKS, RCUT, nbr_capacity=64,
+                         slack=2.5, force_mode="ghost_reduce",
+                         coords=coords_h)
+    grid = _grids(coords_h, box, cfg)["rebalanced"]
+    for planes, g, width in ((grid.planes_x, cfg.grid_dims[0], L),
+                             (grid.planes_y, cfg.grid_dims[1], L),
+                             (grid.planes_z, cfg.grid_dims[2], L)):
+        p = np.asarray(planes)
+        assert p[0] == 0.0 and abs(p[-1] - width) < 1e-5
+        min_w = 0.25 * width / g
+        assert (np.diff(p) >= min_w - 1e-5).all()
