@@ -7,7 +7,12 @@ Runs in ~1 minute on CPU.  Mirrors the paper's workflow at toy scale:
   4. compare gyration radii (the paper's Fig. 8 validation observable).
 
   PYTHONPATH=src python examples/quickstart.py
+  PYTHONPATH=src python examples/quickstart.py --use-pallas --dtype bfloat16
+      # fused differentiable descriptor kernels (interpret mode on CPU)
+      # + the bf16 mixed-precision policy, end to end through the engine
 """
+import argparse
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -20,6 +25,13 @@ from repro.md.observables import gyration_radii_axes, temperature
 
 
 def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="fused differentiable descriptor kernels")
+    ap.add_argument("--dtype", choices=["float32", "bfloat16"],
+                    default="float32", help="DP inference precision policy")
+    args = ap.parse_args()
+
     # 1. system: protein chain solvated in water; protein = DP group
     system, positions, nn_idx = build_solvated_protein(n_residues=8)
     system = mark_nn_group(system, nn_idx)
@@ -35,8 +47,11 @@ def main():
     state = engine.run(state, 20)
     print(f"classical MD: T = {float(temperature(state.velocities, system.masses)):.0f} K")
 
-    # 3. DP-aided MD (in-house DPA-1, paper architecture)
-    model = DPModel(paper_dpa1_config(ntypes=4, rcut=0.6, sel=32))
+    # 3. DP-aided MD (in-house DPA-1, paper architecture); --use-pallas /
+    # --dtype select the kernel route and the inference precision policy
+    model = DPModel(paper_dpa1_config(ntypes=4, rcut=0.6, sel=32,
+                                      dtype=args.dtype,
+                                      use_pallas=args.use_pallas))
     params = model.init_params(jax.random.PRNGKey(0))
     provider = DeepmdForceProvider(model, params, nn_idx, system.types,
                                    system.box, system.n_atoms,

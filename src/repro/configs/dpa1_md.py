@@ -3,9 +3,14 @@ GROMACS-DeePMD coupling parameters (paper Tab. II / Sec. IV-B)."""
 from ..dp.model import DPConfig, paper_dpa1_config
 
 # MD-run cutoff r_c = 0.8 nm (Tab. II), se_attention_v2, emb (32, 64, 128),
-# 3 attention layers x 256, fitting 3 x 256, FP32.
-def paper_config(ntypes: int = 4, sel: int = 64) -> DPConfig:
-    return paper_dpa1_config(ntypes=ntypes, rcut=0.8, sel=sel)
+# 3 attention layers x 256, fitting 3 x 256.  ``dtype`` selects the
+# inference precision policy ("float32" = the paper's FP32 runs;
+# "bfloat16" = bf16 matmuls with fp32 accumulation) and ``use_pallas``
+# routes the descriptor through the fused differentiable kernels.
+def paper_config(ntypes: int = 4, sel: int = 64, dtype: str = "float32",
+                 use_pallas: bool = False) -> DPConfig:
+    return paper_dpa1_config(ntypes=ntypes, rcut=0.8, sel=sel, dtype=dtype,
+                             use_pallas=use_pallas)
 
 MD_PARAMS = {
     "dt_fs": 2.0,

@@ -522,6 +522,9 @@ def _evaluate_rank(model: DPModel, params, coords_all, ref_all, st: dict,
         e_local, f_buf = model.energy_and_forces_dual(
             params, buf_coords, st["buf_types"], nbr_idx, nbr_mask,
             force_mask=st["buf_mask"], report_mask=local_mask, box=None)
+        # force reduction stays in the coordinate dtype (fp32) regardless of
+        # the model's compute policy — the mixed-precision contract
+        f_buf = f_buf.astype(dtype)
         f_global = f_global.at[l_idx].add(f_buf[: cfg.local_capacity]
                                           * l_mask[:, None])
     else:
@@ -530,6 +533,7 @@ def _evaluate_rank(model: DPModel, params, coords_all, ref_all, st: dict,
         e_local, f_buf = model.energy_and_forces(
             params, buf_coords, st["buf_types"], nbr_idx, nbr_mask,
             local_mask, box=None)
+        f_buf = f_buf.astype(dtype)
         f_global = f_global.at[l_idx].add(f_buf[: cfg.local_capacity]
                                           * l_mask[:, None])
         f_global = f_global.at[g_idx].add(f_buf[cfg.local_capacity:]

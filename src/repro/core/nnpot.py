@@ -11,6 +11,12 @@ single-domain) the provider exposes the amortized two-phase API the engine's
 fused scan loop drives — ``assemble`` / ``evaluate`` / ``needs_rebuild`` /
 ``grow`` — mirroring how GROMACS amortizes pair-list construction over
 ``nstlist`` steps.
+
+Kernel path + precision: the model's ``DescriptorConfig.use_pallas`` and
+``DPConfig.dtype`` flow through unchanged — the provider hands the model
+fp32 coordinates and receives fp32 energies/forces whatever the compute
+policy (bf16 only ever touches matmul operands inside the model), so unit
+conversion and the engine-layout scatter are precision-neutral.
 """
 from __future__ import annotations
 

@@ -1,4 +1,5 @@
 """Deep Potential models (DP-SE, DPA-1) and training."""
+from . import precision  # noqa: F401
 from .common import EnvStats, env_matrix, switch_fn  # noqa: F401
 from .descriptors import DescriptorConfig, apply_descriptor, init_descriptor  # noqa: F401
 from .model import DPConfig, DPModel, paper_dpa1_config  # noqa: F401

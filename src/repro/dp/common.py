@@ -17,6 +17,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from ..kernels.env_mat import R2_MIN
+
 
 def switch_fn(r: jax.Array, rcut_smth: float, rcut: float) -> jax.Array:
     """DeePMD smooth switching: 1/r below rcut_smth, poly-decayed to 0 at rcut."""
@@ -25,6 +27,24 @@ def switch_fn(r: jax.Array, rcut_smth: float, rcut: float) -> jax.Array:
     poly = uu ** 3 * (-6 * uu ** 2 + 15 * uu - 10) + 1.0
     inv_r = 1.0 / jnp.maximum(r, 1e-6)
     return jnp.where(r < rcut, inv_r * jnp.where(r < rcut_smth, 1.0, poly), 0.0)
+
+
+def _guarded_env(dr: jax.Array, nbr_mask: jax.Array, rcut_smth: float,
+                 rcut: float):
+    """(dist, sw, r_hat) from displacement vectors, NaN-safe.
+
+    The double-where on d2 keeps *masked* entries off the gradient path; the
+    inner ``maximum`` clamps *valid* coincident pairs (d2 = 0) to r = 1e-6
+    — matching ``switch_fn``'s own clamp — so r_hat = dr/dist is 0/1e-6
+    instead of 0/0 and ``jax.value_and_grad`` stays finite on frames with
+    overlapping atoms (huge forces, as physics demands, but never NaN).
+    """
+    d2 = (dr ** 2).sum(-1)
+    d2 = jnp.where(nbr_mask > 0, jnp.maximum(d2, R2_MIN), 1.0)
+    dist = jnp.sqrt(d2)
+    sw = switch_fn(dist, rcut_smth, rcut) * nbr_mask
+    r_hat = dr / dist[..., None]
+    return dist, sw, r_hat
 
 
 def env_matrix(coords: jax.Array, box, nbr_idx: jax.Array, nbr_mask: jax.Array,
@@ -41,10 +61,7 @@ def env_matrix(coords: jax.Array, box, nbr_idx: jax.Array, nbr_mask: jax.Array,
     dr = coords[safe] - coords[:, None, :]
     if box is not None:
         dr = dr - box * jnp.round(dr / box)
-    d2 = jnp.where(nbr_mask > 0, (dr ** 2).sum(-1), 1.0)  # double-where guard
-    dist = jnp.sqrt(d2)
-    sw = switch_fn(dist, rcut_smth, rcut) * nbr_mask
-    r_hat = dr / dist[..., None]
+    dist, sw, r_hat = _guarded_env(dr, nbr_mask, rcut_smth, rcut)
     R = jnp.concatenate([sw[..., None], sw[..., None] * r_hat], axis=-1)
     return R, r_hat * nbr_mask[..., None], dist, sw
 
@@ -54,10 +71,7 @@ def env_matrix_shifted(coords_local: jax.Array, coords_nbr: jax.Array,
     """Variant where neighbor coordinates are pre-gathered (+ PBC image
     shifts already applied) — the layout the virtual-DD path produces."""
     dr = coords_nbr - coords_local[:, None, :]
-    d2 = jnp.where(nbr_mask > 0, (dr ** 2).sum(-1), 1.0)
-    dist = jnp.sqrt(d2)
-    sw = switch_fn(dist, rcut_smth, rcut) * nbr_mask
-    r_hat = dr / dist[..., None]
+    dist, sw, r_hat = _guarded_env(dr, nbr_mask, rcut_smth, rcut)
     R = jnp.concatenate([sw[..., None], sw[..., None] * r_hat], axis=-1)
     return R, r_hat * nbr_mask[..., None], dist, sw
 

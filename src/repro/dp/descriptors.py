@@ -9,6 +9,15 @@ DP-SE   : D^i = (G^i)^T R~ (R~)^T G^i_r            (bilinear reduction)
 DPA-1   : same reduction, but G^i is refined by l_a gated self-attention
           layers over the neighbor axis; the gate injects the angular
           correlation r_hat . r_hat^T (se_attention_v2).
+
+Hot-path routing: ``DescriptorConfig.use_pallas`` sends the environment
+matrix and the whole attention stack through the fused Pallas kernels in
+``repro.kernels`` (differentiable — both carry custom VJPs with fused
+backward kernels, so ``jax.value_and_grad`` forces run kernel-to-kernel);
+the default jnp path autodiffs through the references.  ``DPConfig.dtype``
+selects the mixed-precision policy (``repro.dp.precision``): matmul/attention
+operands in bf16 with fp32 accumulation, env matrix / switch envelope /
+bilinear reduction always fp32.
 """
 from __future__ import annotations
 
@@ -17,8 +26,10 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from .common import EnvStats, env_matrix_shifted
-from .networks import layer_norm, layer_norm_init, mlp_apply, mlp_init
+from . import precision
+from .common import EnvStats, _guarded_env, env_matrix_shifted
+from .networks import layer_norm_init, mlp_apply, mlp_init
+from ..kernels.ops import env_mat_op, nbr_attention_stack_op
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,7 +44,8 @@ class DescriptorConfig:
     type_embed_dim: int = 8
     attn_layers: int = 3          # l_a (paper: three attention layers)
     attn_hidden: int = 256        # paper: hidden size 256
-    attn_heads: int = 1
+    attn_heads: int = 1           # multi-head split (attn_hidden % heads == 0)
+    use_pallas: bool = False      # fused descriptor kernels vs jnp reference
 
     @property
     def m1(self) -> int:
@@ -43,8 +55,15 @@ class DescriptorConfig:
     def out_dim(self) -> int:
         return self.m1 * self.axis_neuron
 
+    def validate(self) -> None:
+        if self.kind == "dpa1" and self.attn_hidden % self.attn_heads:
+            raise ValueError(
+                f"attn_hidden {self.attn_hidden} not divisible by "
+                f"attn_heads {self.attn_heads}")
+
 
 def init_descriptor(rng: jax.Array, cfg: DescriptorConfig) -> dict:
+    cfg.validate()
     k_emb, k_type, k_attn = jax.random.split(rng, 3)
     params: dict = {}
     # type embedding table (+1 slot for padding type -1 -> clipped to 0 w/ mask)
@@ -53,7 +72,7 @@ def init_descriptor(rng: jax.Array, cfg: DescriptorConfig) -> dict:
     # embedding net: input [s(r), type_emb_j] -> neuron widths
     in_dim = 1 + cfg.type_embed_dim
     params["embed"] = mlp_init(k_emb, (in_dim,) + tuple(cfg.neuron))
-    if cfg.kind == "dpa1":
+    if cfg.kind == "dpa1" and cfg.attn_layers > 0:
         layers = []
         for k in jax.random.split(k_attn, cfg.attn_layers):
             kq, kk, kv, ko = jax.random.split(k, 4)
@@ -69,58 +88,70 @@ def init_descriptor(rng: jax.Array, cfg: DescriptorConfig) -> dict:
     return params
 
 
-def _gated_attention_layer(layer: dict, g: jax.Array, gate: jax.Array,
-                           mask: jax.Array, sw: jax.Array) -> jax.Array:
-    """One se_attention_v2 block over the neighbor axis.
+def _stack_params(layers: list[dict]):
+    """Per-layer param dicts -> the (L, ...) stacked layout the fused
+    attention kernel consumes (a cheap concat; XLA folds it)."""
+    get = lambda name: jnp.stack([l[name] for l in layers])
+    return (get("wq"), get("wk"), get("wv"), get("wo"),
+            jnp.stack([l["ln"]["gamma"] for l in layers]),
+            jnp.stack([l["ln"]["beta"] for l in layers]))
 
-    g: (N, K, M1); gate: (N, K, K) angular dot products r_hat.r_hat^T;
-    mask: (N, K); sw: (N, K) normalized switch envelope in [0, 1].
+
+def _env_planes_pallas(coords_center, coords_nbr, nbr_mask, cfg):
+    """Env-matrix planes + gate inputs for the kernel path.
+
+    The four (s, s*x/r, ...) planes come from the fused ``env_mat`` kernel
+    (custom VJP); dist/r_hat for the angular gate come from the same
+    ``_guarded_env`` helper as the jnp path (shared zero-distance clamp) —
+    elementwise, not the dominant FLOPs, and autodiff-safe.  The helper's
+    redundant switch value is dead code XLA eliminates.
     """
-    q = g @ layer["wq"]
-    k = g @ layer["wk"]
-    v = g @ layer["wv"]
-    scale = 1.0 / jnp.sqrt(q.shape[-1])
-    logits = jnp.einsum("nkh,nlh->nkl", q, k) * scale
-    neg = jnp.finfo(logits.dtype).min
-    logits = jnp.where(mask[:, None, :] > 0, logits, neg)
-    w = jax.nn.softmax(logits, axis=-1)
-    # angular gate + smooth switch envelope (v2 "smooth attention"):
-    # weights decay smoothly to zero as either partner crosses the cutoff,
-    # keeping the descriptor C^1 when neighbors enter/leave the list.
-    w = w * gate * (sw[:, None, :] * sw[:, :, None])
-    w = w * mask[:, None, :] * mask[:, :, None]
-    out = jnp.einsum("nkl,nlh->nkh", w, v) @ layer["wo"]
-    g = g + out
-    g = layer_norm(g, layer["ln"]["gamma"], layer["ln"]["beta"])
-    return g * mask[..., None]
+    dr = coords_nbr - coords_center[:, None, :]
+    s, sx, sy, sz = env_mat_op(dr[..., 0], dr[..., 1], dr[..., 2], nbr_mask,
+                               cfg.rcut_smth, cfg.rcut, use_pallas=True)
+    R = jnp.stack([s, sx, sy, sz], axis=-1)
+    dist, _, r_hat = _guarded_env(dr, nbr_mask, cfg.rcut_smth, cfg.rcut)
+    return R, r_hat * nbr_mask[..., None], dist, s
 
 
 def apply_descriptor(params: dict, cfg: DescriptorConfig, stats: EnvStats,
                      coords_center: jax.Array, coords_nbr: jax.Array,
                      types_center: jax.Array, types_nbr: jax.Array,
-                     nbr_mask: jax.Array) -> jax.Array:
+                     nbr_mask: jax.Array, dtype: str = "float32") -> jax.Array:
     """Compute D^i for every center atom.
 
     coords_center (N,3); coords_nbr (N,K,3) pre-gathered (PBC shifts applied);
     types_* int32 (-1 padding); nbr_mask (N,K).
-    Returns descriptors (N, M1*M2).
+    Returns descriptors (N, M1*M2), always fp32 — ``dtype`` only drops the
+    matmul-operand precision inside (see ``repro.dp.precision``).
     """
-    R, r_hat, dist, sw = env_matrix_shifted(coords_center, coords_nbr,
-                                            nbr_mask, cfg.rcut_smth, cfg.rcut)
+    cfg.validate()
+    cd = precision.compute_dtype(dtype)
+    if cfg.use_pallas:
+        R, r_hat, dist, sw = _env_planes_pallas(coords_center, coords_nbr,
+                                                nbr_mask, cfg)
+    else:
+        R, r_hat, dist, sw = env_matrix_shifted(coords_center, coords_nbr,
+                                                nbr_mask, cfg.rcut_smth,
+                                                cfg.rcut)
     R = stats.normalize(R, types_center) * nbr_mask[..., None]
 
     t_emb = params["type_embed"][jnp.clip(types_nbr, 0)]
     feat = jnp.concatenate([sw[..., None], t_emb * nbr_mask[..., None]], -1)
-    g = mlp_apply(params["embed"], feat)              # (N, K, M1)
+    g = mlp_apply(params["embed"], feat, compute_dtype=cd)   # (N, K, M1)
     g = g * nbr_mask[..., None]
 
-    if cfg.kind == "dpa1":
-        gate = jnp.einsum("nkd,nld->nkl", r_hat, r_hat)
+    if cfg.kind == "dpa1" and cfg.attn_layers > 0:
         sw_env = sw * dist  # recover the [0,1] polynomial envelope from s(r)
-        for layer in params["attn"]:
-            g = _gated_attention_layer(layer, g, gate, nbr_mask, sw_env)
+        g = nbr_attention_stack_op(
+            g, r_hat[..., 0], r_hat[..., 1], r_hat[..., 2], sw_env, nbr_mask,
+            *_stack_params(params["attn"]), heads=cfg.attn_heads,
+            compute_dtype=dtype, use_pallas=cfg.use_pallas)
 
+    # bilinear G^T R R^T G reduction: always fp32 (force-critical)
     k_norm = 1.0 / cfg.sel
+    g = g.astype(jnp.float32)
+    R = R.astype(jnp.float32)
     gr = jnp.einsum("nkm,nka->nma", g, R) * k_norm     # (N, M1, 4)
     d = jnp.einsum("nma,npa->nmp", gr, gr[:, : cfg.axis_neuron, :])
     return d.reshape(d.shape[0], -1)                   # (N, M1*M2)

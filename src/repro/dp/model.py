@@ -14,6 +14,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from . import precision
 from .common import EnvStats
 from .descriptors import DescriptorConfig, apply_descriptor, init_descriptor
 from .networks import count_params, mlp_apply, mlp_init
@@ -23,25 +24,31 @@ from .networks import count_params, mlp_apply, mlp_init
 class DPConfig:
     descriptor: DescriptorConfig = dataclasses.field(default_factory=DescriptorConfig)
     fitting_neuron: tuple = (256, 256, 256)  # paper: 3 x 256
-    dtype: str = "float32"                   # paper: FP32 inference
+    dtype: str = "float32"                   # "float32" (paper) | "bfloat16"
+    #   mixed-precision policy (repro.dp.precision): bf16 matmul operands
+    #   with fp32 accumulation; env matrix / reductions / forces stay fp32
 
     @property
     def ntypes(self) -> int:
         return self.descriptor.ntypes
 
 
-def paper_dpa1_config(ntypes: int = 4, rcut: float = 0.6, sel: int = 64) -> DPConfig:
+def paper_dpa1_config(ntypes: int = 4, rcut: float = 0.6, sel: int = 64,
+                      dtype: str = "float32",
+                      use_pallas: bool = False) -> DPConfig:
     """The paper's in-house DPA-1: emb (32,64,128), 3 attn x 256, fit 3 x 256."""
     return DPConfig(descriptor=DescriptorConfig(
         kind="dpa1", rcut=rcut, rcut_smth=max(rcut - 0.3, 0.15), sel=sel,
         ntypes=ntypes, neuron=(32, 64, 128), axis_neuron=16,
-        attn_layers=3, attn_hidden=256))
+        attn_layers=3, attn_hidden=256, use_pallas=use_pallas), dtype=dtype)
 
 
 class DPModel:
     """Stateless apply-style model; params live in an external pytree."""
 
     def __init__(self, cfg: DPConfig, stats: Optional[EnvStats] = None):
+        precision.validate_dtype(cfg.dtype)
+        cfg.descriptor.validate()
         self.cfg = cfg
         self.stats = stats if stats is not None else EnvStats.identity(cfg.ntypes)
 
@@ -67,8 +74,11 @@ class DPModel:
         """e_i for every center atom (padded atoms -> 0)."""
         desc = apply_descriptor(params["descriptor"], self.cfg.descriptor,
                                 self.stats, coords_center, coords_nbr,
-                                types_center, types_nbr, nbr_mask)
-        e = mlp_apply(params["fitting"], desc)[..., 0]
+                                types_center, types_nbr, nbr_mask,
+                                dtype=self.cfg.dtype)
+        e = mlp_apply(params["fitting"], desc,
+                      compute_dtype=precision.compute_dtype(self.cfg.dtype)
+                      )[..., 0]
         e = e + params["bias"][jnp.clip(types_center, 0)]
         return e * atom_mask
 

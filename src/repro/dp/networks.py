@@ -24,10 +24,20 @@ def mlp_init(rng: jax.Array, sizes: Sequence[int], final_bias: float = 0.0,
 
 
 def mlp_apply(params: list[dict], x: jax.Array, activation=jnp.tanh,
-              resnet: bool = True, final_linear: bool = True) -> jax.Array:
+              resnet: bool = True, final_linear: bool = True,
+              compute_dtype=None) -> jax.Array:
+    """``compute_dtype`` (e.g. bf16) casts the matmul *operands* only; the
+    contraction accumulates fp32 and activations/skips stay fp32 — the
+    mixed-precision policy of ``repro.dp.precision``.  None keeps the plain
+    (bitwise-unchanged) fp32 path."""
     n = len(params)
     for i, layer in enumerate(params):
-        y = x @ layer["w"] + layer["b"]
+        if compute_dtype is not None:
+            y = jnp.einsum("...i,ij->...j", x.astype(compute_dtype),
+                           layer["w"].astype(compute_dtype),
+                           preferred_element_type=jnp.float32) + layer["b"]
+        else:
+            y = x @ layer["w"] + layer["b"]
         last = i == n - 1
         if last and final_linear:
             x = y

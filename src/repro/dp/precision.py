@@ -1,0 +1,34 @@
+"""Mixed-precision policy for DP inference (`DPConfig.dtype`).
+
+The policy follows what made large-scale DeePMD inference hardware-limited
+(Jia et al. SC20; Lu et al. 2020): drop the *matmul operand* precision, keep
+everything force-critical in fp32.  Concretely, for ``dtype="bfloat16"``:
+
+  * embedding / fitting MLP matmuls and all attention contractions run with
+    bf16 operands and **fp32 accumulation** (``preferred_element_type``);
+  * the environment matrix, switch envelope, angular gate, softmax,
+    residual adds, layer norms and the bilinear G^T R R^T G reduction stay
+    fp32 — these set the force noise floor;
+  * coordinates, energies and the force reduction (autodiff cotangents,
+    scatter-adds, mesh collectives) are fp32 end to end.
+
+``dtype="float32"`` is the identity policy (bitwise-unchanged fp32 path).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+DTYPES = ("float32", "bfloat16")
+
+
+def validate_dtype(dtype: str) -> str:
+    if dtype not in DTYPES:
+        raise ValueError(f"DPConfig.dtype must be one of {DTYPES}, "
+                         f"got {dtype!r}")
+    return dtype
+
+
+def compute_dtype(dtype: str):
+    """Matmul-operand dtype for the policy (None = plain fp32 path)."""
+    validate_dtype(dtype)
+    return jnp.bfloat16 if dtype == "bfloat16" else None

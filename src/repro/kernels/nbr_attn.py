@@ -2,13 +2,33 @@
 
 The second DP hot-spot: for every center atom, l_a attention layers over its
 K neighbors.  The GPU implementation launches one fused attention kernel per
-layer; the TPU adaptation processes a block of atoms per grid step and keeps
-the whole (K x K) score matrix plus the (K, M) activations resident in VMEM,
-so only G enters and leaves HBM per layer.
+layer; the TPU adaptation goes further and fuses the *whole l_a-layer stack*
+into a single kernel: one grid step processes a block of atoms and keeps the
+(K x M) activations plus the (heads, K, K) score matrix resident in VMEM
+across all layers, so G enters and leaves HBM exactly once per stack — not
+once per layer.  The angular gate is computed in-kernel from the r_hat
+planes; it never touches HBM.
 
 Layout: G tiles are (BLOCK_N, K, M) with M = 128 in lanes (MXU-aligned);
-per-atom matmuls run as batched ``dot_general`` over the block.  The angular
-gate is computed in-kernel from the r_hat planes — it never touches HBM.
+per-atom matmuls run as batched ``dot_general`` over the block.  Multi-head
+attention splits the hidden width H into ``heads`` contiguous H/heads
+slices sharing the angular gate.
+
+Autodiff: the stack carries a ``jax.custom_vjp``.  The forward kernel
+stashes each layer's *input* activations (L, N, K, M) — everything else
+(projections, scores, softmax) is cheaper to recompute than to spill, the
+flash-attention trade.  The backward kernel sweeps the layers in reverse in
+one pallas_call: per block it rebuilds the score matrix in VMEM, backprops
+layer norm -> output projection -> gated softmax -> QKV, accumulates the
+angular-gate/envelope cotangents across layers, and reduces parameter
+gradients into accumulator blocks that stay resident across the grid
+(initialized at block 0 — TPU grids execute sequentially, and vmapped grid
+dims are hidden from ``pl.program_id``, so the pattern survives the batched
+ensemble drivers).
+
+Mixed precision: ``compute_dtype`` casts matmul *operands* (bf16 on the MXU)
+while every accumulation, the softmax, the gate, residual adds and layer
+norm stay fp32 — the policy `DPConfig.dtype` selects.
 """
 from __future__ import annotations
 
@@ -18,81 +38,313 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+_PJ = (((2,), (0,)), ((), ()))  # batched (B, K, M) @ (M, H)
 
-def _nbr_attn_kernel(g_ref, rx_ref, ry_ref, rz_ref, sw_ref, mask_ref,
-                     wq_ref, wk_ref, wv_ref, wo_ref, gamma_ref, beta_ref,
-                     out_ref):
-    g = g_ref[...]          # (B, K, M)
-    mask = mask_ref[...]    # (B, K)
-    sw = sw_ref[...]        # (B, K) smooth envelope in [0, 1]
-    wq = wq_ref[...]        # (M, H)
-    wk = wk_ref[...]
-    wv = wv_ref[...]
-    wo = wo_ref[...]        # (H, M)
 
+def _cast(x, dtype):
+    return x if x.dtype == dtype else x.astype(dtype)
+
+
+def _gate_mul(rx, ry, rz, sw, mask):
+    """Combined score multiplier: angular gate x smooth envelope x mask."""
+    gate = (rx[:, :, None] * rx[:, None, :] + ry[:, :, None] * ry[:, None, :]
+            + rz[:, :, None] * rz[:, None, :])
+    gmul = gate * (sw[:, :, None] * sw[:, None, :])
+    return gate, gmul * (mask[:, :, None] * mask[:, None, :])
+
+
+def _layer_core(g, gmul, mask, wq, wk, wv, wo, heads: int, cd):
+    """Forward intermediates for one layer (fwd kernel + bwd recompute)."""
     b, k, m = g.shape
-    h = wq.shape[1]
-    dims = (((2,), (0,)), ((), ()))  # batched (B,K,M) @ (M,H)
-    q = jax.lax.dot_general(g, wq, dims)            # (B, K, H)
-    kk = jax.lax.dot_general(g, wk, dims)
-    v = jax.lax.dot_general(g, wv, dims)
+    h = wq.shape[-1]
+    hd = h // heads
+    f32 = jnp.float32
+    gc = _cast(g, cd)
+    q = jax.lax.dot_general(gc, _cast(wq, cd), _PJ,
+                            preferred_element_type=f32).reshape(b, k, heads, hd)
+    kk = jax.lax.dot_general(gc, _cast(wk, cd), _PJ,
+                             preferred_element_type=f32).reshape(b, k, heads, hd)
+    v = jax.lax.dot_general(gc, _cast(wv, cd), _PJ,
+                            preferred_element_type=f32).reshape(b, k, heads, hd)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, f32))
+    scores = jax.lax.dot_general(
+        _cast(q, cd), _cast(kk, cd), (((3,), (3,)), ((0, 2), (0, 2))),
+        preferred_element_type=f32) * scale              # (B, heads, K, K)
+    neg = jnp.finfo(f32).min
+    scores = jnp.where(mask[:, None, None, :] > 0, scores, neg)
+    p = jax.nn.softmax(scores, axis=-1)
+    w = p * gmul[:, None, :, :]
+    o_h = jax.lax.dot_general(
+        _cast(w, cd), _cast(v, cd), (((3,), (1,)), ((0, 1), (0, 2))),
+        preferred_element_type=f32)                      # (B, heads, K, hd)
+    o = o_h.transpose(0, 2, 1, 3).reshape(b, k, h)
+    out = jax.lax.dot_general(_cast(o, cd), _cast(wo, cd), _PJ,
+                              preferred_element_type=f32)
+    g1 = g + out
+    mu = g1.mean(-1, keepdims=True)
+    var = ((g1 - mu) ** 2).mean(-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + 1e-5)
+    xhat = (g1 - mu) * inv
+    return dict(q=q, kk=kk, v=v, p=p, w=w, o=o, inv=inv, xhat=xhat,
+                scale=scale)
 
-    scale = 1.0 / jnp.sqrt(jnp.asarray(h, g.dtype))
-    scores = jax.lax.dot_general(q, kk, (((2,), (2,)), ((0,), (0,)))) * scale
-    neg = jnp.finfo(scores.dtype).min
-    scores = jnp.where(mask[:, None, :] > 0, scores, neg)
-    w = jax.nn.softmax(scores, axis=-1)             # (B, K, K)
 
-    # angular gate r_hat . r_hat^T from the three direction planes
+def _layer_bwd(g_in, dg, gmul, mask, wq, wk, wv, wo, gamma, heads: int, cd):
+    """Analytic backward of one layer; recomputes the forward in VMEM.
+
+    Backward contractions run fp32 (the stored intermediates are fp32
+    accumulations) — for cd = fp32 this matches the jnp autodiff bitwise up
+    to reassociation; for bf16 the forward already quantized the operands.
+    """
+    c = _layer_core(g_in, gmul, mask, wq, wk, wv, wo, heads, cd)
+    b, k, m = g_in.shape
+    h = wq.shape[-1]
+    hd = h // heads
+    # out = layer_norm(g1) * mask
+    dln = dg * mask[..., None]
+    dgamma = (dln * c["xhat"]).sum((0, 1))
+    dbeta = dln.sum((0, 1))
+    dxhat = dln * gamma
+    dg1 = c["inv"] * (dxhat - dxhat.mean(-1, keepdims=True)
+                      - c["xhat"] * (dxhat * c["xhat"]).mean(-1, keepdims=True))
+    # out-projection: o (B,K,H) @ wo (H,M)
+    dwo = jax.lax.dot_general(c["o"], dg1, (((0, 1), (0, 1)), ((), ())))
+    do_h = jax.lax.dot_general(dg1, wo, (((2,), (1,)), ((), ()))) \
+        .reshape(b, k, heads, hd).transpose(0, 2, 1, 3)  # (B, heads, K, hd)
+    # o_h = W @ v
+    dw = jax.lax.dot_general(do_h, c["v"],
+                             (((3,), (3,)), ((0, 1), (0, 2))))  # (B,h,K,K)
+    dv = jax.lax.dot_general(c["w"], do_h,
+                             (((2,), (2,)), ((0, 1), (0, 1)))) \
+        .transpose(0, 2, 1, 3).reshape(b, k, h)
+    # W = P * gmul  (gmul shared across heads)
+    dp = dw * gmul[:, None, :, :]
+    dgmul = (dw * c["p"]).sum(1)                         # (B, K, K)
+    ds = c["p"] * (dp - (dp * c["p"]).sum(-1, keepdims=True)) * c["scale"]
+    # scores = q k^T
+    dq = jax.lax.dot_general(ds, c["kk"],
+                             (((3,), (1,)), ((0, 1), (0, 2)))) \
+        .transpose(0, 2, 1, 3).reshape(b, k, h)
+    dk = jax.lax.dot_general(ds, c["q"],
+                             (((2,), (1,)), ((0, 1), (0, 2)))) \
+        .transpose(0, 2, 1, 3).reshape(b, k, h)
+    dwq = jax.lax.dot_general(g_in, dq, (((0, 1), (0, 1)), ((), ())))
+    dwk = jax.lax.dot_general(g_in, dk, (((0, 1), (0, 1)), ((), ())))
+    dwv = jax.lax.dot_general(g_in, dv, (((0, 1), (0, 1)), ((), ())))
+    dgin = dg1 \
+        + jax.lax.dot_general(dq, wq, (((2,), (1,)), ((), ()))) \
+        + jax.lax.dot_general(dk, wk, (((2,), (1,)), ((), ()))) \
+        + jax.lax.dot_general(dv, wv, (((2,), (1,)), ((), ())))
+    return dgin, dgmul, dwq, dwk, dwv, dwo, dgamma, dbeta
+
+
+# ---------------------------------------------------------------------------
+# Fused stack kernels
+# ---------------------------------------------------------------------------
+
+def _stack_fwd_kernel(g_ref, rx_ref, ry_ref, rz_ref, sw_ref, mask_ref,
+                      wq_ref, wk_ref, wv_ref, wo_ref, gamma_ref, beta_ref,
+                      out_ref, *res_ref, layers: int, heads: int, cd):
+    """``res_ref`` is present only on the VJP-forward variant — the primal
+    (no-grad) path skips the residual stash entirely, so G really does
+    enter and leave HBM exactly once per stack."""
+    mask = mask_ref[...]
+    _, gmul = _gate_mul(rx_ref[...], ry_ref[...], rz_ref[...], sw_ref[...],
+                        mask)
+    g = g_ref[...]
+    for l in range(layers):
+        if res_ref:
+            res_ref[0][l] = g               # layer-input residual stash
+        c = _layer_core(g, gmul, mask, wq_ref[l], wk_ref[l], wv_ref[l],
+                        wo_ref[l], heads, cd)
+        g = (c["xhat"] * gamma_ref[l] + beta_ref[l]) * mask[..., None]
+    out_ref[...] = g
+
+
+def _stack_bwd_kernel(res_ref, rx_ref, ry_ref, rz_ref, sw_ref, mask_ref,
+                      wq_ref, wk_ref, wv_ref, wo_ref, gamma_ref, beta_ref,
+                      dout_ref,
+                      dg_ref, drx_ref, dry_ref, drz_ref, dsw_ref,
+                      dwq_ref, dwk_ref, dwv_ref, dwo_ref, dgamma_ref,
+                      dbeta_ref, *, layers: int, heads: int, cd):
+    # parameter-grad accumulators live across the (sequential) grid; vmapped
+    # batch dims are hidden from program_id, so block 0 is per-batch-element
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        for r in (dwq_ref, dwk_ref, dwv_ref, dwo_ref, dgamma_ref, dbeta_ref):
+            r[...] = jnp.zeros_like(r)
+
+    mask = mask_ref[...]
     rx = rx_ref[...]
     ry = ry_ref[...]
     rz = rz_ref[...]
-    gate = (rx[:, :, None] * rx[:, None, :] + ry[:, :, None] * ry[:, None, :]
-            + rz[:, :, None] * rz[:, None, :])
-    w = w * gate * (sw[:, :, None] * sw[:, None, :])
-    w = w * (mask[:, :, None] * mask[:, None, :])
+    sw = sw_ref[...]
+    gate, gmul = _gate_mul(rx, ry, rz, sw, mask)
 
-    o = jax.lax.dot_general(w, v, (((2,), (1,)), ((0,), (0,))))  # (B, K, H)
-    o = jax.lax.dot_general(o, wo, dims)                          # (B, K, M)
-    g = g + o
+    dg = dout_ref[...]
+    dgmul_acc = jnp.zeros(gmul.shape, gmul.dtype)
+    for l in reversed(range(layers)):
+        dg, dgmul, dwq, dwk, dwv, dwo, dgam, dbet = _layer_bwd(
+            res_ref[l], dg, gmul, mask, wq_ref[l], wk_ref[l], wv_ref[l],
+            wo_ref[l], gamma_ref[l], heads, cd)
+        dgmul_acc += dgmul
+        dwq_ref[l] += dwq
+        dwk_ref[l] += dwk
+        dwv_ref[l] += dwv
+        dwo_ref[l] += dwo
+        dgamma_ref[l] += dgam
+        dbeta_ref[l] += dbet
 
-    # layer norm over M
-    mu = g.mean(-1, keepdims=True)
-    var = ((g - mu) ** 2).mean(-1, keepdims=True)
-    g = (g - mu) * jax.lax.rsqrt(var + 1e-5) * gamma_ref[...] + beta_ref[...]
-    out_ref[...] = g * mask[..., None]
+    # gmul = gate * (sw x sw) * (mask x mask): expand the accumulated
+    # cotangent onto the direction planes and the envelope
+    mm = mask[:, :, None] * mask[:, None, :]
+    swsw = sw[:, :, None] * sw[:, None, :]
+    dgate = dgmul_acc * swsw * mm
+    hsw = dgmul_acc * gate * mm
+    dsw_ref[...] = ((hsw * sw[:, None, :]).sum(2)
+                    + (hsw * sw[:, :, None]).sum(1))
+    sym = dgate + dgate.transpose(0, 2, 1)
+    drx_ref[...] = (sym * rx[:, None, :]).sum(2)
+    dry_ref[...] = (sym * ry[:, None, :]).sum(2)
+    drz_ref[...] = (sym * rz[:, None, :]).sum(2)
+    dg_ref[...] = dg
 
 
-@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
-def nbr_attention_layer(g, rx, ry, rz, sw, mask, wq, wk, wv, wo, gamma, beta,
-                        block_n: int = 8, interpret: bool = False):
-    """One gated self-attention layer over the neighbor axis.
+# ---------------------------------------------------------------------------
+# pallas_call plumbing + custom VJP
+# ---------------------------------------------------------------------------
 
-    g (N, K, M); rx/ry/rz/sw/mask (N, K); wq/wk/wv (M, H); wo (H, M);
-    gamma/beta (M,).  Returns the updated (N, K, M).
-    """
+def _stack_fwd_call(g, rx, ry, rz, sw, mask, wq, wk, wv, wo, gamma, beta,
+                    heads: int, compute_dtype: str, block_n: int,
+                    interpret: bool, stash: bool):
     n, k, m = g.shape
-    h = wq.shape[1]
-    pad_n = (-n) % block_n
-    if pad_n:
-        g = jnp.pad(g, ((0, pad_n), (0, 0), (0, 0)))
-        rx, ry, rz, sw, mask = (jnp.pad(a, ((0, pad_n), (0, 0)))
-                                for a in (rx, ry, rz, sw, mask))
-    np_ = n + pad_n
-
-    grid = (np_ // block_n,)
+    layers, _, h = wq.shape
+    grid = (n // block_n,)
     tile3 = pl.BlockSpec((block_n, k, m), lambda i: (i, 0, 0))
     tile2 = pl.BlockSpec((block_n, k), lambda i: (i, 0))
+    res_spec = pl.BlockSpec((layers, block_n, k, m), lambda i: (0, i, 0, 0))
     full = lambda *shape: pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
 
-    out = pl.pallas_call(
-        _nbr_attn_kernel,
+    kernel = functools.partial(_stack_fwd_kernel, layers=layers, heads=heads,
+                               cd=jnp.dtype(compute_dtype))
+    outs = pl.pallas_call(
+        kernel,
         grid=grid,
         in_specs=[tile3, tile2, tile2, tile2, tile2, tile2,
-                  full(m, h), full(m, h), full(m, h), full(h, m),
-                  full(m), full(m)],
-        out_specs=tile3,
-        out_shape=jax.ShapeDtypeStruct((np_, k, m), g.dtype),
+                  full(layers, m, h), full(layers, m, h), full(layers, m, h),
+                  full(layers, h, m), full(layers, m), full(layers, m)],
+        out_specs=[tile3] + ([res_spec] if stash else []),
+        out_shape=[jax.ShapeDtypeStruct((n, k, m), g.dtype)]
+                  + ([jax.ShapeDtypeStruct((layers, n, k, m), g.dtype)]
+                     if stash else []),
         interpret=interpret,
     )(g, rx, ry, rz, sw, mask, wq, wk, wv, wo, gamma, beta)
-    return out[:n] if pad_n else out
+    return (outs[0], outs[1]) if stash else (outs[0], None)
+
+
+def _stack_bwd_call(res, rx, ry, rz, sw, mask, wq, wk, wv, wo, gamma, beta,
+                    dout, heads: int, compute_dtype: str, block_n: int,
+                    interpret: bool):
+    layers, n, k, m = res.shape
+    h = wq.shape[-1]
+    grid = (n // block_n,)
+    tile3 = pl.BlockSpec((block_n, k, m), lambda i: (i, 0, 0))
+    tile2 = pl.BlockSpec((block_n, k), lambda i: (i, 0))
+    res_spec = pl.BlockSpec((layers, block_n, k, m), lambda i: (0, i, 0, 0))
+    full = lambda *shape: pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+
+    kernel = functools.partial(_stack_bwd_kernel, layers=layers, heads=heads,
+                               cd=jnp.dtype(compute_dtype))
+    f32 = jnp.float32
+    outs = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[res_spec, tile2, tile2, tile2, tile2, tile2,
+                  full(layers, m, h), full(layers, m, h), full(layers, m, h),
+                  full(layers, h, m), full(layers, m), full(layers, m),
+                  tile3],
+        out_specs=[tile3, tile2, tile2, tile2, tile2,
+                   full(layers, m, h), full(layers, m, h), full(layers, m, h),
+                   full(layers, h, m), full(layers, m), full(layers, m)],
+        out_shape=[jax.ShapeDtypeStruct((n, k, m), f32),
+                   jax.ShapeDtypeStruct((n, k), f32),
+                   jax.ShapeDtypeStruct((n, k), f32),
+                   jax.ShapeDtypeStruct((n, k), f32),
+                   jax.ShapeDtypeStruct((n, k), f32),
+                   jax.ShapeDtypeStruct((layers, m, h), f32),
+                   jax.ShapeDtypeStruct((layers, m, h), f32),
+                   jax.ShapeDtypeStruct((layers, m, h), f32),
+                   jax.ShapeDtypeStruct((layers, h, m), f32),
+                   jax.ShapeDtypeStruct((layers, m), f32),
+                   jax.ShapeDtypeStruct((layers, m), f32)],
+        interpret=interpret,
+    )(res, rx, ry, rz, sw, mask, wq, wk, wv, wo, gamma, beta, dout)
+    return outs
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(12, 13, 14, 15))
+def _stack(g, rx, ry, rz, sw, mask, wq, wk, wv, wo, gamma, beta,
+           heads, compute_dtype, block_n, interpret):
+    out, _ = _stack_fwd_call(g, rx, ry, rz, sw, mask, wq, wk, wv, wo, gamma,
+                             beta, heads, compute_dtype, block_n, interpret,
+                             stash=False)
+    return out
+
+
+def _stack_vjp_fwd(g, rx, ry, rz, sw, mask, wq, wk, wv, wo, gamma, beta,
+                   heads, compute_dtype, block_n, interpret):
+    out, res = _stack_fwd_call(g, rx, ry, rz, sw, mask, wq, wk, wv, wo,
+                               gamma, beta, heads, compute_dtype, block_n,
+                               interpret, stash=True)
+    return out, (res, rx, ry, rz, sw, mask, wq, wk, wv, wo, gamma, beta)
+
+
+def _stack_vjp_bwd(heads, compute_dtype, block_n, interpret, saved, dout):
+    res, rx, ry, rz, sw, mask, wq, wk, wv, wo, gamma, beta = saved
+    (dg, drx, dry, drz, dsw, dwq, dwk, dwv, dwo, dgamma, dbeta) = \
+        _stack_bwd_call(res, rx, ry, rz, sw, mask, wq, wk, wv, wo, gamma,
+                        beta, dout, heads, compute_dtype, block_n, interpret)
+    return (dg, drx, dry, drz, dsw, jnp.zeros_like(mask),
+            dwq, dwk, dwv, dwo, dgamma, dbeta)
+
+
+_stack.defvjp(_stack_vjp_fwd, _stack_vjp_bwd)
+
+
+def _pad_n(a, pad: int):
+    return jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+
+
+@functools.partial(jax.jit, static_argnames=("heads", "compute_dtype",
+                                             "block_n", "interpret"))
+def nbr_attention_stack(g, rx, ry, rz, sw, mask, wq, wk, wv, wo, gamma, beta,
+                        heads: int = 1, compute_dtype: str = "float32",
+                        block_n: int = 8, interpret: bool = False):
+    """l_a fused gated self-attention layers over the neighbor axis.
+
+    g (N, K, M); rx/ry/rz/sw/mask (N, K); stacked per-layer params
+    wq/wk/wv (L, M, H), wo (L, H, M), gamma/beta (L, M).  Returns the
+    updated (N, K, M).  Differentiable in everything except ``mask`` via
+    the fused reverse-sweep backward kernel.
+    """
+    n = g.shape[0]
+    if wq.shape[-1] % heads:
+        raise ValueError(f"attn_hidden {wq.shape[-1]} not divisible by "
+                         f"heads {heads}")
+    pad = (-n) % block_n
+    if pad:
+        g, rx, ry, rz, sw, mask = (_pad_n(a, pad)
+                                   for a in (g, rx, ry, rz, sw, mask))
+    out = _stack(g, rx, ry, rz, sw, mask, wq, wk, wv, wo, gamma, beta,
+                 heads, compute_dtype, block_n, interpret)
+    return out[:n] if pad else out
+
+
+def nbr_attention_layer(g, rx, ry, rz, sw, mask, wq, wk, wv, wo, gamma, beta,
+                        block_n: int = 8, interpret: bool = False,
+                        heads: int = 1):
+    """One gated self-attention layer — the L=1 slice of the fused stack."""
+    return nbr_attention_stack(g, rx, ry, rz, sw, mask, wq[None], wk[None],
+                               wv[None], wo[None], gamma[None], beta[None],
+                               heads=heads, block_n=block_n,
+                               interpret=interpret)

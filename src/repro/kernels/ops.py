@@ -13,7 +13,7 @@ from . import ref
 from .cell_gather import cell_filter
 from .env_mat import env_mat
 from .flash_attn import flash_attention
-from .nbr_attn import nbr_attention_layer
+from .nbr_attn import nbr_attention_layer, nbr_attention_stack
 
 _ON_TPU = jax.default_backend() == "tpu"
 
@@ -50,13 +50,36 @@ def cell_filter_op(dx, dy, dz, valid, rcut: float,
 
 
 def nbr_attention_op(g, rx, ry, rz, sw, mask, wq, wk, wv, wo, gamma, beta,
-                     use_pallas: bool = False,
+                     heads: int = 1, use_pallas: bool = False,
                      interpret: bool = not _ON_TPU):
     if not use_pallas:
         return ref.nbr_attention_layer_ref(g, rx, ry, rz, sw, mask,
-                                           wq, wk, wv, wo, gamma, beta)
+                                           wq, wk, wv, wo, gamma, beta,
+                                           heads=heads)
     return nbr_attention_layer(g, rx, ry, rz, sw, mask, wq, wk, wv, wo,
-                               gamma, beta, interpret=interpret)
+                               gamma, beta, heads=heads, interpret=interpret)
+
+
+def nbr_attention_stack_op(g, rx, ry, rz, sw, mask, wq, wk, wv, wo, gamma,
+                           beta, heads: int = 1,
+                           compute_dtype: str = "float32",
+                           use_pallas: bool = False,
+                           interpret: bool = not _ON_TPU):
+    """The fused l_a-layer DPA-1 attention stack (differentiable both ways).
+
+    The jnp path autodiffs through the reference; the Pallas path carries a
+    custom VJP whose backward is a fused reverse-sweep kernel.  Params are
+    stacked along a leading layer axis: wq/wk/wv (L, M, H), wo (L, H, M),
+    gamma/beta (L, M).
+    """
+    if not use_pallas:
+        return ref.nbr_attention_stack_ref(g, rx, ry, rz, sw, mask, wq, wk,
+                                           wv, wo, gamma, beta, heads=heads,
+                                           compute_dtype=compute_dtype)
+    return nbr_attention_stack(g, rx, ry, rz, sw, mask, wq, wk, wv, wo,
+                               gamma, beta, heads=heads,
+                               compute_dtype=compute_dtype,
+                               interpret=interpret)
 
 
 def attention_op(q, k, v, causal: bool = True, window: int = 0,

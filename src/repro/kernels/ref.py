@@ -1,17 +1,24 @@
 """Pure-jnp oracles for every Pallas kernel (the correctness contract).
 
 Tests sweep shapes/dtypes and assert_allclose kernels (interpret=True on CPU)
-against these references.
+against these references.  The references are fully autodiff-able, so they
+also serve as the VJP oracles for the custom-vjp kernels (``jax.grad``
+through a reference == the fused backward kernel) and as the jnp fallback
+path on backends where Mosaic does not lower.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from .env_mat import R2_MIN as _R2_MIN  # shared zero-distance clamp
+
 
 def env_mat_ref(dx, dy, dz, mask, rcut_smth: float, rcut: float):
     d2 = dx * dx + dy * dy + dz * dz
-    d2 = jnp.where(mask > 0, d2, 1.0)
+    # valid coincident pairs clamp to r = 1e-6 (switch_fn semantics); the
+    # max() also makes the gradient exactly zero below the clamp
+    d2 = jnp.where(mask > 0, jnp.maximum(d2, _R2_MIN), 1.0)
     r = jnp.sqrt(d2)
     u = (r - rcut_smth) / (rcut - rcut_smth)
     uu = jnp.clip(u, 0.0, 1.0)
@@ -26,26 +33,66 @@ def cell_filter_ref(dx, dy, dz, valid, rcut: float):
     return ((d2 < rcut * rcut) & (valid > 0)).astype(dx.dtype)
 
 
-def nbr_attention_layer_ref(g, rx, ry, rz, sw, mask, wq, wk, wv, wo,
-                            gamma, beta):
-    q = g @ wq
-    k = g @ wk
-    v = g @ wv
-    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], g.dtype))
-    scores = jnp.einsum("nkh,nlh->nkl", q, k) * scale
-    neg = jnp.finfo(scores.dtype).min
-    scores = jnp.where(mask[:, None, :] > 0, scores, neg)
-    w = jax.nn.softmax(scores, axis=-1)
+def _cast(x, dtype):
+    return x if x.dtype == dtype else x.astype(dtype)
+
+
+def nbr_attention_stack_ref(g, rx, ry, rz, sw, mask, wq, wk, wv, wo,
+                            gamma, beta, heads: int = 1,
+                            compute_dtype=jnp.float32):
+    """l_a gated se_attention_v2 layers over the neighbor axis (jnp oracle).
+
+    g (N, K, M); rx/ry/rz/sw/mask (N, K); stacked params wq/wk/wv (L, M, H),
+    wo (L, H, M), gamma/beta (L, M).  ``heads`` splits H into H/heads-wide
+    heads sharing the angular gate; ``compute_dtype`` is the matmul operand
+    dtype (bf16 operands, fp32 accumulation — softmax, gate, residual adds
+    and layer norm always run in fp32).
+    """
+    cd = jnp.dtype(compute_dtype)
+    f32 = jnp.float32
+    n, k, m = g.shape
+    h = wq.shape[-1]
+    if h % heads:
+        raise ValueError(f"attn_hidden {h} not divisible by heads {heads}")
+    hd = h // heads
     gate = (rx[:, :, None] * rx[:, None, :] + ry[:, :, None] * ry[:, None, :]
             + rz[:, :, None] * rz[:, None, :])
-    w = w * gate * (sw[:, :, None] * sw[:, None, :])
-    w = w * (mask[:, :, None] * mask[:, None, :])
-    o = jnp.einsum("nkl,nlh->nkh", w, v) @ wo
-    g = g + o
-    mu = g.mean(-1, keepdims=True)
-    var = ((g - mu) ** 2).mean(-1, keepdims=True)
-    g = (g - mu) * jax.lax.rsqrt(var + 1e-5) * gamma + beta
-    return g * mask[..., None]
+    gmul = gate * (sw[:, :, None] * sw[:, None, :])
+    gmul = gmul * (mask[:, :, None] * mask[:, None, :])
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, f32))
+    neg = jnp.finfo(f32).min
+    for l in range(wq.shape[0]):
+        q = jnp.einsum("nkm,mh->nkh", _cast(g, cd), _cast(wq[l], cd),
+                       preferred_element_type=f32).reshape(n, k, heads, hd)
+        kk = jnp.einsum("nkm,mh->nkh", _cast(g, cd), _cast(wk[l], cd),
+                        preferred_element_type=f32).reshape(n, k, heads, hd)
+        v = jnp.einsum("nkm,mh->nkh", _cast(g, cd), _cast(wv[l], cd),
+                       preferred_element_type=f32).reshape(n, k, heads, hd)
+        scores = jnp.einsum("nkcd,nlcd->nckl", _cast(q, cd), _cast(kk, cd),
+                            preferred_element_type=f32) * scale
+        scores = jnp.where(mask[:, None, None, :] > 0, scores, neg)
+        w = jax.nn.softmax(scores, axis=-1)             # (N, heads, K, K)
+        w = w * gmul[:, None, :, :]
+        o = jnp.einsum("nckl,nlcd->nkcd", _cast(w, cd), _cast(v, cd),
+                       preferred_element_type=f32).reshape(n, k, h)
+        o = jnp.einsum("nkh,hm->nkm", _cast(o, cd), _cast(wo[l], cd),
+                       preferred_element_type=f32)
+        g1 = g + o
+        mu = g1.mean(-1, keepdims=True)
+        var = ((g1 - mu) ** 2).mean(-1, keepdims=True)
+        g = (g1 - mu) * jax.lax.rsqrt(var + 1e-5) * gamma[l] + beta[l]
+        g = g * mask[..., None]
+    return g
+
+
+def nbr_attention_layer_ref(g, rx, ry, rz, sw, mask, wq, wk, wv, wo,
+                            gamma, beta, heads: int = 1,
+                            compute_dtype=jnp.float32):
+    """One gated attention layer — the L=1 slice of the stack oracle."""
+    return nbr_attention_stack_ref(g, rx, ry, rz, sw, mask, wq[None],
+                                   wk[None], wv[None], wo[None], gamma[None],
+                                   beta[None], heads=heads,
+                                   compute_dtype=compute_dtype)
 
 
 def attention_ref(q, k, v, causal: bool = True, window: int = 0,

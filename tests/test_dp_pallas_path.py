@@ -1,0 +1,159 @@
+"""End-to-end kernel-path parity: ``DescriptorConfig.use_pallas=True``
+(interpret mode on CPU) must reproduce the jnp descriptor path through every
+force driver — single-domain, 8-rank distributed (fused and the stateful
+skin-reuse split), and the replica-batched ensemble driver.
+
+The distributed/batched cases need forced host devices, so they run in one
+subprocess (tests proper must see a single device).
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_in_subprocess
+
+RNG = np.random.default_rng(11)
+
+
+def _models():
+    import dataclasses
+    from repro.dp import DPConfig, DPModel, DescriptorConfig
+    desc = DescriptorConfig(kind="dpa1", rcut=0.6, rcut_smth=0.3, sel=32,
+                            ntypes=4, neuron=(8, 16), axis_neuron=4,
+                            attn_layers=2, attn_hidden=32, attn_heads=2)
+    mk = lambda up: DPModel(DPConfig(
+        descriptor=dataclasses.replace(desc, use_pallas=up),
+        fitting_neuron=(24, 24)))
+    return mk(False), mk(True)
+
+
+def test_single_domain_parity():
+    from repro.core.ddinfer import single_domain_forces
+    m_jnp, m_pal = _models()
+    params = m_jnp.init_params(jax.random.PRNGKey(0))
+    box = np.array([2.5] * 3, np.float32)
+    coords = jnp.asarray(RNG.uniform(0, 2.5, (64, 3)), jnp.float32)
+    types = jnp.asarray(RNG.integers(0, 4, 64), jnp.int32)
+    e0, f0 = single_domain_forces(m_jnp, params, coords, types, box, 32)
+    e1, f1 = single_domain_forces(m_pal, params, coords, types, box, 32)
+    scale = float(jnp.abs(f0).max())
+    np.testing.assert_allclose(float(e1), float(e0), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f0),
+                               rtol=1e-5, atol=1e-5 * scale)
+
+
+def test_single_domain_batched_parity():
+    from repro.core.ddinfer import single_domain_forces_batched
+    m_jnp, m_pal = _models()
+    params = m_jnp.init_params(jax.random.PRNGKey(0))
+    box = np.array([2.5] * 3, np.float32)
+    coords = jnp.asarray(RNG.uniform(0, 2.5, (3, 48, 3)), jnp.float32)
+    types = jnp.asarray(RNG.integers(0, 4, 48), jnp.int32)
+    e0, f0 = single_domain_forces_batched(m_jnp, params, coords, types, box, 32)
+    e1, f1 = single_domain_forces_batched(m_pal, params, coords, types, box, 32)
+    scale = float(jnp.abs(f0).max())
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e0), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f0),
+                               rtol=1e-5, atol=1e-5 * scale)
+
+
+_DD_CODE = r"""
+import dataclasses, json
+import jax, jax.numpy as jnp, numpy as np
+from repro.dp import DPConfig, DPModel, DescriptorConfig
+from repro.core import (make_assembly_fn, make_batched_force_fn,
+                        make_distributed_force_fn, make_evaluation_fn,
+                        suggest_config)
+from repro.ensemble import make_ensemble_mesh
+from repro.launch.mesh import make_dd_mesh
+
+rng = np.random.default_rng(5)
+n = 128
+box = np.array([3.0, 3.0, 3.0], np.float32)
+coords_h = rng.uniform(0, 3.0, (n, 3)).astype(np.float32)
+coords = jnp.asarray(coords_h)
+types = jnp.asarray(rng.integers(0, 4, n), jnp.int32)
+
+desc = DescriptorConfig(kind="dpa1", rcut=0.6, rcut_smth=0.3, sel=32,
+                        ntypes=4, neuron=(8, 16), axis_neuron=4,
+                        attn_layers=2, attn_hidden=32, attn_heads=2)
+mk = lambda up: DPModel(DPConfig(
+    descriptor=dataclasses.replace(desc, use_pallas=up),
+    fitting_neuron=(24, 24)))
+m_jnp, m_pal = mk(False), mk(True)
+params = m_jnp.init_params(jax.random.PRNGKey(0))
+out = {}
+
+def rel(a, b):
+    return float(jnp.abs(a - b).max() / (jnp.abs(b).max() + 1e-12))
+
+# -- fused per-step distributed driver, 8-rank mesh ------------------------
+mesh = make_dd_mesh(8)
+cfg = suggest_config(n, box, 8, 0.6, nbr_capacity=48, slack=2.5,
+                     coords=coords_h)
+e0, f0, d0 = make_distributed_force_fn(m_jnp, cfg, mesh, box, n)(
+    params, coords, types)
+e1, f1, d1 = make_distributed_force_fn(m_pal, cfg, mesh, box, n)(
+    params, coords, types)
+out["dist"] = {"de": abs(float(e1 - e0)) / abs(float(e0)), "df": rel(f1, f0),
+               "overflow": int(d0["overflow"]) + int(d1["overflow"])}
+
+# -- stateful skin-reuse split: assemble once, evaluate at drifted coords --
+skin = 0.06
+cfgS = suggest_config(n, box, 8, 0.6, nbr_capacity=48, slack=2.5,
+                      coords=coords_h, skin=skin)
+drift = rng.normal(0, 0.2 * skin / 2, (n, 3)).astype(np.float32)
+nrm = np.linalg.norm(drift, axis=1, keepdims=True)
+drift *= np.minimum(1.0, (0.4 * skin / 2) / np.maximum(nrm, 1e-12))
+coords2 = jnp.asarray(np.mod(coords_h + drift, box).astype(np.float32))
+res = {}
+for tag, model in (("jnp", m_jnp), ("pal", m_pal)):
+    st = make_assembly_fn(model, cfgS, mesh, box, n)(coords, types)
+    e, f, diag = make_evaluation_fn(model, cfgS, mesh, box, n)(
+        params, coords2, st)
+    res[tag] = (e, f, int(diag["overflow"]), bool(diag["needs_rebuild"]))
+out["skin"] = {"de": abs(float(res["pal"][0] - res["jnp"][0]))
+                     / abs(float(res["jnp"][0])),
+               "df": rel(res["pal"][1], res["jnp"][1]),
+               "overflow": res["jnp"][2] + res["pal"][2],
+               "rebuild": res["jnp"][3] or res["pal"][3]}
+
+# -- replica-batched driver on a (2 x 4) ensemble mesh ---------------------
+R = 2
+emesh = make_ensemble_mesh(2, 4)
+cfgB = suggest_config(n, box, 4, 0.6, nbr_capacity=48, slack=2.5,
+                      coords=coords_h)
+coordsB = jnp.stack([coords, coords2])
+eb0, fb0, db0 = make_batched_force_fn(m_jnp, cfgB, emesh, box, n, R)(
+    params, coordsB, types)
+eb1, fb1, db1 = make_batched_force_fn(m_pal, cfgB, emesh, box, n, R)(
+    params, coordsB, types)
+out["batched"] = {"de": rel(eb0, eb1), "df": rel(fb1, fb0),
+                  "overflow": int(db0["overflow"].sum())
+                              + int(db1["overflow"].sum())}
+print("JSON" + json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def dd_results():
+    stdout = run_in_subprocess(_DD_CODE, n_devices=8, timeout=560)
+    line = [l for l in stdout.splitlines() if l.startswith("JSON")][0]
+    return json.loads(line[4:])
+
+
+@pytest.mark.parametrize("driver", ["dist", "skin", "batched"])
+def test_distributed_drivers_parity(dd_results, driver):
+    r = dd_results[driver]
+    assert r["overflow"] == 0, r
+    assert r["de"] < 1e-5, r
+    assert r["df"] < 1e-5, r
+
+
+def test_skin_path_stayed_stale(dd_results):
+    """The drift stayed inside skin/2 — the parity above really exercised
+    the stale-state (reuse) evaluation, not a rebuild."""
+    assert not dd_results["skin"]["rebuild"]

@@ -1,0 +1,238 @@
+"""Kernel autodiff contract: the fused Pallas backward kernels (custom VJP,
+interpret mode on CPU) must match ``jax.grad`` through the jnp oracles.
+
+These run in the fast CI job — a VJP regression silently corrupts *forces*
+(the MD observable), so it must fail before merge.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.ops import env_mat_op, nbr_attention_stack_op
+
+RNG = np.random.default_rng(7)
+
+
+def _env_inputs(n, k, masked_row=None):
+    dx, dy, dz = (jnp.asarray(RNG.normal(0, 0.3, (n, k)), jnp.float32)
+                  for _ in range(3))
+    mask = jnp.asarray(RNG.random((n, k)) > 0.3, jnp.float32)
+    if masked_row is not None:
+        mask = mask.at[masked_row].set(0.0)
+    cts = tuple(jnp.asarray(RNG.normal(size=(n, k)), jnp.float32)
+                for _ in range(4))
+    return dx, dy, dz, mask, cts
+
+
+def _env_loss(fn, mask, cts):
+    def f(dx, dy, dz):
+        outs = fn(dx, dy, dz, mask, 0.2, 0.6)
+        return sum((o * c).sum() for o, c in zip(outs, cts))
+    return f
+
+
+@pytest.mark.parametrize("n,k", [(8, 32), (37, 50), (1, 8), (16, 128)])
+def test_env_mat_vjp_parity(n, k):
+    dx, dy, dz, mask, cts = _env_inputs(n, k, masked_row=min(3, n - 1))
+    pall = lambda *a: env_mat_op(*a, use_pallas=True, interpret=True)
+    gp = jax.grad(_env_loss(pall, mask, cts), (0, 1, 2))(dx, dy, dz)
+    gr = jax.grad(_env_loss(ref.env_mat_ref, mask, cts), (0, 1, 2))(dx, dy, dz)
+    for a, b in zip(gp, gr):
+        # atol absorbs rsqrt-vs-sqrt branch jitter right at the cutoff
+        # (gradient magnitudes reach ~1e2-1e3 at close range)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=5e-5)
+
+
+def test_env_mat_vjp_masked_rows_zero():
+    """Fully-masked rows contribute exactly zero gradient."""
+    dx, dy, dz, mask, cts = _env_inputs(12, 24)
+    mask = mask.at[5].set(0.0)
+    pall = lambda *a: env_mat_op(*a, use_pallas=True, interpret=True)
+    gp = jax.grad(_env_loss(pall, mask, cts), (0, 1, 2))(dx, dy, dz)
+    for g in gp:
+        assert float(jnp.abs(np.asarray(g)[5]).max()) == 0.0
+
+
+def test_env_mat_vjp_coincident_pair():
+    """A valid zero-distance pair: huge-but-finite gradients matching the
+    jnp double-where oracle (the clamp freezes the r-chain, the direct
+    q = h/r^2 term survives)."""
+    dx, dy, dz, mask, cts = _env_inputs(9, 16)
+    dx = dx.at[0, 0].set(0.0)
+    dy = dy.at[0, 0].set(0.0)
+    dz = dz.at[0, 0].set(0.0)
+    mask = mask.at[0, 0].set(1.0)
+    pall = lambda *a: env_mat_op(*a, use_pallas=True, interpret=True)
+    gp = jax.grad(_env_loss(pall, mask, cts), (0, 1, 2))(dx, dy, dz)
+    gr = jax.grad(_env_loss(ref.env_mat_ref, mask, cts), (0, 1, 2))(dx, dy, dz)
+    for a, b in zip(gp, gr):
+        assert bool(jnp.isfinite(a).all())
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=1e-4)
+
+
+def _attn_inputs(n, k, m, h, layers):
+    g = jnp.asarray(RNG.normal(0, 1, (n, k, m)), jnp.float32)
+    rx, ry, rz, sw = (jnp.asarray(RNG.normal(0, 1, (n, k)), jnp.float32)
+                      for _ in range(4))
+    mask = jnp.asarray(RNG.random((n, k)) > 0.2, jnp.float32)
+    if n > 1:
+        mask = mask.at[1].set(0.0)       # fully-masked row in every sweep
+    wq, wk, wv = (jnp.asarray(RNG.normal(0, 0.1, (layers, m, h)), jnp.float32)
+                  for _ in range(3))
+    wo = jnp.asarray(RNG.normal(0, 0.1, (layers, h, m)), jnp.float32)
+    gamma = jnp.ones((layers, m)) + 0.1 * jnp.asarray(
+        RNG.normal(size=(layers, m)), jnp.float32)
+    beta = 0.1 * jnp.asarray(RNG.normal(size=(layers, m)), jnp.float32)
+    ct = jnp.asarray(RNG.normal(size=(n, k, m)), jnp.float32)
+    return g, rx, ry, rz, sw, mask, wq, wk, wv, wo, gamma, beta, ct
+
+
+@pytest.mark.parametrize("n,k,m,h,layers,heads",
+                         [(5, 16, 32, 32, 1, 1),
+                          (9, 24, 16, 48, 3, 4),
+                          (1, 8, 8, 16, 2, 2),
+                          (12, 40, 24, 24, 2, 1)])
+def test_attention_stack_vjp_parity(n, k, m, h, layers, heads):
+    (g, rx, ry, rz, sw, mask, wq, wk, wv, wo, gamma, beta,
+     ct) = _attn_inputs(n, k, m, h, layers)
+
+    def loss(use_pallas):
+        def f(g, rx, ry, rz, sw, wq, wk, wv, wo, gamma, beta):
+            out = nbr_attention_stack_op(
+                g, rx, ry, rz, sw, mask, wq, wk, wv, wo, gamma, beta,
+                heads=heads, use_pallas=use_pallas, interpret=True)
+            return (out * ct).sum()
+        return f
+
+    args = (g, rx, ry, rz, sw, wq, wk, wv, wo, gamma, beta)
+    argn = tuple(range(len(args)))
+    gp = jax.grad(loss(True), argn)(*args)
+    gr = jax.grad(loss(False), argn)(*args)
+    names = "g rx ry rz sw wq wk wv wo gamma beta".split()
+    for nm, a, b in zip(names, gp, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=3e-4, err_msg=nm)
+
+
+def test_attention_stack_vjp_under_vmap():
+    """The batched ensemble drivers vmap grad through the stack: the
+    param-grad accumulator init must be per batch element."""
+    n, k, m, h, layers, heads, r = 4, 8, 16, 16, 2, 2, 3
+    stacked = [_attn_inputs(n, k, m, h, layers) for _ in range(r)]
+    batch = [jnp.stack([s[i] for s in stacked]) for i in range(6)]
+    wq, wk, wv, wo, gamma, beta = stacked[0][6:12]
+
+    def one(use_pallas):
+        def f(g, rx, ry, rz, sw, mask, wq, wk, wv, wo, gamma, beta):
+            out = nbr_attention_stack_op(
+                g, rx, ry, rz, sw, mask, wq, wk, wv, wo, gamma, beta,
+                heads=heads, use_pallas=use_pallas, interpret=True)
+            return (out ** 2).sum()
+        return f
+
+    argn = (0, 6, 7, 8, 9, 10, 11)   # g + every param
+    in_axes = (0, 0, 0, 0, 0, 0, None, None, None, None, None, None)
+    gp = jax.vmap(jax.grad(one(True), argn), in_axes=in_axes)(
+        *batch, wq, wk, wv, wo, gamma, beta)
+    gr = jax.vmap(jax.grad(one(False), argn), in_axes=in_axes)(
+        *batch, wq, wk, wv, wo, gamma, beta)
+    for a, b in zip(gp, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=3e-4)
+
+
+def test_attention_stack_bf16_close_to_fp32():
+    """bf16 operands / fp32 accumulation: output stays within bf16 noise of
+    the fp32 stack on both the kernel and the jnp path."""
+    (g, rx, ry, rz, sw, mask, wq, wk, wv, wo, gamma, beta,
+     _) = _attn_inputs(8, 16, 32, 32, 2)
+    args = (g, rx, ry, rz, sw, mask, wq, wk, wv, wo, gamma, beta)
+    base = nbr_attention_stack_op(*args, use_pallas=False)
+    for use_pallas in (False, True):
+        out = nbr_attention_stack_op(*args, compute_dtype="bfloat16",
+                                     use_pallas=use_pallas, interpret=True)
+        assert out.dtype == jnp.float32
+        err = float(jnp.abs(out - base).max())
+        scale = float(jnp.abs(base).max())
+        assert err < 0.05 * scale, (err, scale, use_pallas)
+
+
+# ---------------------------------------------------------------------------
+# Model-level: forces through energy_and_forces
+# ---------------------------------------------------------------------------
+
+def _small_model(use_pallas: bool, dtype: str = "float32"):
+    from repro.dp import DPConfig, DPModel, DescriptorConfig
+    desc = DescriptorConfig(kind="dpa1", rcut=0.6, rcut_smth=0.3, sel=16,
+                            ntypes=3, neuron=(8, 16), axis_neuron=4,
+                            attn_layers=2, attn_hidden=32, attn_heads=2,
+                            use_pallas=use_pallas)
+    return DPModel(DPConfig(descriptor=desc, fitting_neuron=(24, 24),
+                            dtype=dtype))
+
+
+def _frame(n=40, box=2.0):
+    coords = jnp.asarray(RNG.uniform(0, box, (n, 3)), jnp.float32)
+    types = jnp.asarray(RNG.integers(0, 3, n), jnp.int32)
+    return coords, types, np.array([box] * 3, np.float32)
+
+
+def test_bf16_force_rmse_tolerance():
+    """The acceptance metric: bf16 forces within a small RMSE of fp32
+    through the full energy_and_forces path, on both kernel routes."""
+    from repro.core.ddinfer import single_domain_forces
+    coords, types, box = _frame()
+    model = _small_model(False)
+    params = model.init_params(jax.random.PRNGKey(0))
+    _, f32 = single_domain_forces(model, params, coords, types, box, 16)
+    rms = float(jnp.sqrt((f32 ** 2).mean()))
+    for use_pallas in (False, True):
+        mb = _small_model(use_pallas, dtype="bfloat16")
+        _, fb = single_domain_forces(mb, params, coords, types, box, 16)
+        rmse = float(jnp.sqrt(((fb - f32) ** 2).mean()))
+        assert np.isfinite(rmse)
+        assert rmse < 0.05 * (rms + 1e-6), (rmse, rms, use_pallas)
+
+
+def test_coincident_atoms_finite_forces():
+    """Regression: a frame with two exactly-coincident atoms must produce
+    finite energies and forces (not NaN) on both descriptor paths."""
+    from repro.core.ddinfer import single_domain_forces
+    coords, types, box = _frame()
+    coords = coords.at[1].set(coords[0])
+    for use_pallas in (False, True):
+        model = _small_model(use_pallas)
+        params = model.init_params(jax.random.PRNGKey(0))
+        e, f = single_domain_forces(model, params, coords, types, box, 16)
+        assert bool(jnp.isfinite(e)), use_pallas
+        assert bool(jnp.isfinite(f).all()), use_pallas
+
+
+def test_attn_heads_must_divide_hidden():
+    from repro.dp import DescriptorConfig
+    with pytest.raises(ValueError):
+        DescriptorConfig(attn_hidden=48, attn_heads=5).validate()
+    cfg = DescriptorConfig(attn_hidden=48, attn_heads=4)
+    cfg.validate()
+    assert dataclasses.asdict(cfg)["attn_heads"] == 4
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_attn_layers_zero_still_works(use_pallas):
+    """l_a = 0 (a DP-SE-style dpa1 config) must not crash on either path."""
+    from repro.core.ddinfer import single_domain_forces
+    from repro.dp import DPConfig, DPModel, DescriptorConfig
+    desc = DescriptorConfig(kind="dpa1", rcut=0.6, rcut_smth=0.3, sel=16,
+                            ntypes=3, neuron=(8, 16), axis_neuron=4,
+                            attn_layers=0, use_pallas=use_pallas)
+    model = DPModel(DPConfig(descriptor=desc, fitting_neuron=(16,)))
+    params = model.init_params(jax.random.PRNGKey(0))
+    coords, types, box = _frame(n=24)
+    e, f = single_domain_forces(model, params, coords, types, box, 16)
+    assert bool(jnp.isfinite(e)) and bool(jnp.isfinite(f).all())

@@ -6,7 +6,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ref
 from repro.kernels.ops import (attention_op, cell_filter_op, env_mat_op,
-                               nbr_attention_op)
+                               nbr_attention_op, nbr_attention_stack_op)
 
 RNG = np.random.default_rng(0)
 
@@ -69,6 +69,31 @@ def test_nbr_attention_kernel(n, k, m, h):
                                        wo, gamma, beta)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=3e-4, atol=3e-4)
+
+
+@pytest.mark.parametrize("n,k,m,h,layers,heads",
+                         [(13, 24, 64, 96, 3, 1), (8, 16, 32, 64, 2, 4),
+                          (5, 48, 128, 256, 3, 2)])
+def test_nbr_attention_stack_kernel(n, k, m, h, layers, heads):
+    """The fused multi-layer kernel == the layer oracle iterated L times."""
+    g = jnp.asarray(RNG.normal(0, 1, (n, k, m)), jnp.float32)
+    rx, ry, rz, sw = (jnp.asarray(RNG.normal(0, 1, (n, k)), jnp.float32)
+                      for _ in range(4))
+    mask = jnp.asarray(RNG.random((n, k)) > 0.2, jnp.float32)
+    wq, wk, wv = (jnp.asarray(RNG.normal(0, 0.1, (layers, m, h)), jnp.float32)
+                  for _ in range(3))
+    wo = jnp.asarray(RNG.normal(0, 0.1, (layers, h, m)), jnp.float32)
+    gamma, beta = jnp.ones((layers, m)), jnp.zeros((layers, m))
+    got = nbr_attention_stack_op(g, rx, ry, rz, sw, mask, wq, wk, wv, wo,
+                                 gamma, beta, heads=heads, use_pallas=True,
+                                 interpret=True)
+    want = g
+    for l in range(layers):
+        want = ref.nbr_attention_layer_ref(want, rx, ry, rz, sw, mask, wq[l],
+                                           wk[l], wv[l], wo[l], gamma[l],
+                                           beta[l], heads=heads)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-4, atol=5e-4)
 
 
 @pytest.mark.parametrize(
