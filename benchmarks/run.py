@@ -14,12 +14,13 @@ def main() -> None:
     from . import (dd_reuse, dd_scaling, dp_inference, ensemble_throughput,
                    fig7_training, fig8_validation, fig9_overhead,
                    fig10_strong_scaling, fig11_weak_scaling, fig12_breakdown,
-                   roofline_bench)
+                   roofline_bench, serve_throughput)
     modules = [
         ("dd_scaling", dd_scaling),
         ("dd_reuse", dd_reuse),
         ("dp_inference", dp_inference),
         ("ensemble_throughput", ensemble_throughput),
+        ("serve_throughput", serve_throughput),
         ("fig10_strong_scaling", fig10_strong_scaling),
         ("fig11_weak_scaling", fig11_weak_scaling),
         ("fig9_overhead", fig9_overhead),

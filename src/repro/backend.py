@@ -1,0 +1,139 @@
+"""ForceBackend: the formal contract every force evaluator implements.
+
+Historically the force-provider surface grew ad hoc on
+``repro.core.nnpot.DeepmdForceProvider`` — an eager ``__call__`` plus the
+amortized ``assemble``/``evaluate``/``needs_rebuild``/``grow``/
+``state_overflow`` quintet — and subclasses copied private methods to change
+the execution engine.  This module extracts that grab-bag into one typed
+protocol so local providers, replica-batched providers and remote (served)
+providers are interchangeable behind :class:`repro.md.engine.MDEngine`:
+
+* :class:`ForceRequest` / :class:`ForceResult` — the typed request/response
+  pair.  Array fields may be concrete (host calls, the serving layer) or
+  tracers (the engine's jitted windows trace straight through ``compute``);
+  the metadata fields (``tenant``, ``req_id``, ``deadline``) are plain host
+  values used by the multi-tenant serving layer (:mod:`repro.serve`) for
+  accounting, routing and timeouts.
+
+* :class:`ForceBackend` — the universal surface: ``compute(request) ->
+  result`` plus capability flags.  ``stateful`` advertises the amortized
+  assemble/evaluate split (:class:`StatefulForceBackend`); ``batched``
+  advertises a leading replica axis on ``positions`` (the ensemble path);
+  ``host_side`` demands eager (concrete-positions) evaluation — the engine
+  drives its per-step host loop instead of fusing the provider into jitted
+  windows (the remote serving client needs this: a blocking round-trip
+  inside a large fused computation can starve the device executor).
+
+* :class:`StatefulForceBackend` — the amortized two-phase extension the
+  engine's fused scan loop drives when ``stateful`` is true (the GROMACS
+  ``nstlist`` analogue): ``assemble`` builds a reusable decomposition state,
+  ``evaluate`` reuses it until ``needs_rebuild`` fires, ``grow`` doubles the
+  static capacities after ``state_overflow``.
+
+The module is dependency-light on purpose (no imports from ``repro.core`` /
+``repro.md``): it is the neutral layer the MD engine, the providers and the
+serving stack all meet at.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Protocol, runtime_checkable
+
+
+@dataclasses.dataclass
+class ForceRequest:
+    """One force evaluation: positions + box, plus serving metadata.
+
+    ``positions``/``box`` are in the *caller's* frame — engine units and
+    full-system layout when the request comes from the MD engine (the
+    provider owns the NN-group extraction and unit conversion), model units
+    and NN-group layout when the request is already on the serving wire.
+    ``types`` is only populated on the wire (the server is multi-tenant and
+    cannot assume one topology).  ``deadline`` is a host wall-clock time
+    (``time.monotonic`` frame) after which the server may drop the request
+    instead of computing it.
+    """
+
+    positions: Any                 # (..., N, 3) array or tracer
+    box: Any = None                # (3,) array or tracer
+    types: Any = None              # (N,) int32 — wire requests only
+    tenant: str = "default"        # multi-tenant accounting id
+    req_id: int = 0
+    deadline: Optional[float] = None   # time.monotonic() cutoff
+
+    @property
+    def n_atoms(self) -> int:
+        return int(self.positions.shape[-2])
+
+
+@dataclasses.dataclass
+class ForceResult:
+    """The response: energy/forces in the request's frame + diagnostics.
+
+    ``ok=False`` marks a degraded outcome (timeout, capacity overflow after
+    exhausting growth, server shutdown); ``energy``/``forces`` are zeros in
+    that case and ``error`` says why.  ``diagnostics`` carries provider-
+    specific flags (overflow counts, rebuild flags, queue latency) — values
+    may be tracers when ``compute`` was called inside jit.
+    """
+
+    energy: Any                    # (...,) scalar per trajectory
+    forces: Any                    # (..., N, 3)
+    diagnostics: dict = dataclasses.field(default_factory=dict)
+    tenant: str = "default"
+    req_id: int = 0
+    ok: bool = True
+    error: str = ""
+
+
+@runtime_checkable
+class ForceBackend(Protocol):
+    """Minimal contract: capability flags + one typed entry point.
+
+    ``compute`` must be jit-transparent — called with tracer
+    ``request.positions`` inside the engine's fused windows it returns a
+    :class:`ForceResult` holding tracers.  Implementations must not branch
+    on array *values* when traced (shape/metadata branching is fine).
+    """
+
+    stateful: bool   # supports the amortized assemble/evaluate split below
+    batched: bool    # positions carry a leading replica axis
+    host_side: bool  # must be called eagerly (engine uses its host loop)
+
+    def compute(self, request: ForceRequest) -> ForceResult:
+        """Forces for one request (eager or traced)."""
+        ...
+
+
+@runtime_checkable
+class StatefulForceBackend(ForceBackend, Protocol):
+    """Amortized two-phase extension (drive only when ``stateful`` is true).
+
+    Contract mirrored from the GROMACS pair-list amortization: ``assemble``
+    at positions P is valid for ``evaluate`` at any P' with per-atom
+    displacement < skin/2 (checked by ``needs_rebuild``); ``state_overflow``
+    flags a state whose static capacities were exceeded (results truncated,
+    state invalid), and ``grow`` doubles those capacities — the caller then
+    re-assembles and replays the affected window.
+    """
+
+    def assemble(self, positions) -> Any:
+        """Assembly phase at the current positions -> reusable state."""
+        ...
+
+    def evaluate(self, positions, state) -> tuple:
+        """(energy, forces, flags) reusing ``state``; ``flags`` carries at
+        least ``needs_rebuild`` and ``overflow`` (shaped per trajectory)."""
+        ...
+
+    def needs_rebuild(self, positions, state):
+        """Per-trajectory bool: some atom moved > skin/2 since assembly."""
+        ...
+
+    def state_overflow(self, state):
+        """Per-trajectory bool/int: static capacities exceeded."""
+        ...
+
+    def grow(self) -> None:
+        """Double the static capacities (rare; triggers a re-jit)."""
+        ...

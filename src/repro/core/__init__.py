@@ -9,5 +9,8 @@ from .ddinfer import (DDConfig, DDState, suggest_config,  # noqa: F401
                       make_batched_evaluation_fn, make_batched_check_fn,
                       single_domain_forces, single_domain_state,
                       single_domain_forces_nlist,
-                      single_domain_forces_batched)
+                      single_domain_forces_batched,
+                      masked_neighbor_list, make_padded_batch_fn)
 from .nnpot import DeepmdForceProvider, UnitConversion  # noqa: F401
+from ..backend import (ForceBackend, ForceRequest, ForceResult,  # noqa: F401
+                       StatefulForceBackend)

@@ -1056,6 +1056,71 @@ def make_batched_force_fn(model: DPModel, cfg: DDConfig, mesh: Mesh, box,
     return jax.jit(fn)
 
 
+def masked_neighbor_list(coords: jax.Array, box: jax.Array, rcut: float,
+                         k: int, valid: jax.Array):
+    """Validity-masked brute-force full list (PBC minimum image).
+
+    Identical construction to ``md.neighbors.brute_force_neighbor_list``
+    (same index-ordered top-k scoring, -1 padded), except atoms with
+    ``valid == 0`` neither appear as centers nor as candidates — the
+    padding-row primitive for the force-serving bucket evaluator, where a
+    request shorter than its shape bucket rides in a padded row whose tail
+    atoms must be invisible.  Returns (idx (N,K) int32, mask (N,K) {0,1},
+    overflow () bool).
+    """
+    n = coords.shape[0]
+    dr = minimum_image(coords[None, :, :] - coords[:, None, :], box)
+    within = ((dr ** 2).sum(-1) < rcut ** 2) & ~jnp.eye(n, dtype=bool)
+    within &= (valid[:, None] > 0) & (valid[None, :] > 0)
+    score = jnp.where(within, -jnp.arange(n, dtype=jnp.float32)[None, :],
+                      -jnp.inf)
+    _, order = jax.lax.top_k(score, min(k, n))
+    take = jnp.take_along_axis(within, order, axis=1)
+    idx = jnp.where(take, order, -1)
+    if idx.shape[1] < k:
+        pad = -jnp.ones((n, k - idx.shape[1]), jnp.int32)
+        idx = jnp.concatenate([idx.astype(jnp.int32), pad], 1)
+        take = jnp.concatenate([take, jnp.zeros_like(pad, bool)], 1)
+    overflow = (within.sum(1) > k).any()
+    return (idx.astype(jnp.int32), take.astype(coords.dtype), overflow)
+
+
+def make_padded_batch_fn(model: DPModel, n_max: int, nbr_capacity: int):
+    """Resident jitted bucket evaluator for the force-serving layer.
+
+    Signature: f(params, coords (B, n_max, 3), types (B, n_max),
+    mask (B, n_max), box (B, 3)) -> (energy (B,), forces (B, n_max, 3),
+    overflow (B,) bool).
+
+    Each row is one *independent* tenant request padded up to the shape
+    bucket ``n_max`` (heterogeneous systems: per-row types AND per-row box),
+    vmapped into a single fused dispatch — the execution engine behind
+    ``repro.serve.ForceServer``'s continuous batching.  Padding atoms
+    (``mask == 0``) are excluded from every neighbor list and energy term,
+    so a padded row reproduces its unpadded ``single_domain_forces`` result
+    and an all-padding row (a bucket slot with no request) contributes
+    nothing.  ``overflow`` flags rows whose within-cutoff neighbor count
+    exceeded ``nbr_capacity`` (results truncated — the caller must retry at
+    a larger capacity or reject).
+    """
+    rcut = model.cfg.descriptor.rcut
+
+    def one(params, coords, types, mask, box):
+        idx, nmask, overflow = masked_neighbor_list(coords, box, rcut,
+                                                    nbr_capacity, mask)
+        e, f = model.energy_and_forces(params, coords, types, idx, nmask,
+                                       local_mask=mask, box=box)
+        return e, f * mask[:, None], overflow
+
+    batched = jax.vmap(one, in_axes=(None, 0, 0, 0, 0))
+
+    def fn(params, coords, types, mask, box):
+        assert coords.shape[-2] == n_max, (coords.shape, n_max)
+        return batched(params, coords, types, mask, box)
+
+    return jax.jit(fn)
+
+
 def single_domain_forces_batched(model: DPModel, params, coords, types, box,
                                  nbr_capacity: int):
     """Replica-batched single-domain reference: coords (R, N, 3) -> per-

@@ -12,6 +12,15 @@ fused scan loop drives — ``assemble`` / ``evaluate`` / ``needs_rebuild`` /
 ``grow`` — mirroring how GROMACS amortizes pair-list construction over
 ``nstlist`` steps.
 
+The provider implements :class:`repro.backend.StatefulForceBackend`: the
+typed entry point is :meth:`DeepmdForceProvider.compute` (a
+:class:`~repro.backend.ForceRequest` in, a
+:class:`~repro.backend.ForceResult` out); the legacy eager
+``__call__(positions, box)`` survives as a deprecation shim that routes
+through the protocol.  Subclasses change the execution engine by overriding
+the documented ``backend_*`` hooks (see the class docstring), not by
+copying private methods.
+
 Kernel path + precision: the model's ``DescriptorConfig.use_pallas`` and
 ``DPConfig.dtype`` flow through unchanged — the provider hands the model
 fp32 coordinates and receives fp32 energies/forces whatever the compute
@@ -21,6 +30,7 @@ conversion and the engine-layout scatter are precision-neutral.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional
 
 import jax
@@ -28,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
+from ..backend import ForceRequest, ForceResult
 from ..dp.model import DPModel
 from ..md.neighbors import needs_rebuild as _nlist_needs_rebuild
 from .ddinfer import (DDConfig, make_assembly_fn, make_displacement_check_fn,
@@ -73,7 +84,26 @@ class DeepmdForceProvider:
     skin-widened full :class:`~repro.md.neighbors.NeighborList`) and
     ``evaluate`` reuses it until ``needs_rebuild`` reports an atom moved
     more than skin/2.  ``grow`` doubles the static capacities after an
-    overflow (the engine re-runs the affected window)."""
+    overflow (the engine re-runs the affected window).
+
+    **Extension hooks** (the official subclassing surface — override these,
+    never the underscore internals): the distributed drivers come from
+    :meth:`backend_build_fns` (called at init and after every ``grow``),
+    and the single-domain execution engine is the four hooks
+
+    ============================  =========================================
+    ``backend_assemble``          nn_pos -> reusable neighbor state
+    ``backend_needs_rebuild``     (nn_pos, state) -> rebuild flag(s)
+    ``backend_evaluate``          (nn_pos, state) -> (e, f_nn, flags)
+    ``backend_forces``            nn_pos -> (e, f_nn) fused per-step path
+    ============================  =========================================
+
+    all in *model* units over the extracted NN group (leading batch axes
+    pass through) — ``repro.ensemble.BatchedDeepmdProvider`` overrides
+    exactly this set to vmap the pipeline over a replica axis."""
+
+    batched = False    # ForceBackend capability flag: no leading replica axis
+    host_side = False  # jit-transparent: fuses into the engine's windows
 
     def __init__(self, model: DPModel, params, nn_indices: np.ndarray,
                  types, box, n_atoms: int,
@@ -104,13 +134,14 @@ class DeepmdForceProvider:
                 rcut = model.cfg.descriptor.rcut
                 self.nbr_capacity = int(np.ceil(
                     nbr_capacity * ((rcut + skin) / rcut) ** 3))
-        self._build_fns()
+        self.backend_build_fns()
         self._state = None
         self.growths = 0
         self.last_diag: Optional[dict] = None
 
-    def _build_fns(self) -> None:
-        """(Re)build the jitted distributed fns — called after ``grow``."""
+    def backend_build_fns(self) -> None:
+        """Hook: (re)build the jitted distributed fns — called at init and
+        after every ``grow`` (capacities may have changed)."""
         if self.dd_config is not None:
             self._dist_fn = make_distributed_force_fn(
                 self.model, self.dd_config, self.mesh, self.box_model,
@@ -145,9 +176,10 @@ class DeepmdForceProvider:
         nn_pos = self._to_model(positions)
         if self.dd_config is not None:
             return self._asm_fn(nn_pos, self.nn_types)
-        return self._single_domain_assemble(nn_pos)
+        return self.backend_assemble(nn_pos)
 
-    def _single_domain_assemble(self, nn_pos: jax.Array):
+    def backend_assemble(self, nn_pos: jax.Array):
+        """Hook: single-domain assembly (model units, NN group)."""
         return single_domain_state(self.model, nn_pos, self.box_model,
                                    self.nbr_capacity, self.skin)
 
@@ -163,9 +195,10 @@ class DeepmdForceProvider:
         nn_pos = self._to_model(positions)
         if self.dd_config is not None:
             return self._check_fn(nn_pos, state)
-        return self._single_domain_needs_rebuild(nn_pos, state)
+        return self.backend_needs_rebuild(nn_pos, state)
 
-    def _single_domain_needs_rebuild(self, nn_pos: jax.Array, state):
+    def backend_needs_rebuild(self, nn_pos: jax.Array, state):
+        """Hook: single-domain skin displacement check."""
         return _nlist_needs_rebuild(state, nn_pos, self.box_model, self.skin)
 
     def evaluate(self, positions: jax.Array, state):
@@ -182,16 +215,17 @@ class DeepmdForceProvider:
             flags = {"overflow": diag["overflow"] > 0,
                      "needs_rebuild": diag["needs_rebuild"]}
         else:
-            e, f_nn, flags = self._single_domain_evaluate(nn_pos, state)
+            e, f_nn, flags = self.backend_evaluate(nn_pos, state)
         e, forces = self._to_engine(e, f_nn, positions)
         return e, forces, flags
 
-    def _single_domain_evaluate(self, nn_pos: jax.Array, state):
+    def backend_evaluate(self, nn_pos: jax.Array, state):
+        """Hook: single-domain evaluation reusing ``state``."""
         e, f_nn = single_domain_forces_nlist(
             self.model, self.params, nn_pos, self.nn_types,
             self.box_model, state)
         flags = {"overflow": state.overflow,
-                 "needs_rebuild": self._single_domain_needs_rebuild(
+                 "needs_rebuild": self.backend_needs_rebuild(
                      nn_pos, state)}
         return e, f_nn, flags
 
@@ -208,12 +242,12 @@ class DeepmdForceProvider:
                 ghost_capacity=min(2 * c.ghost_capacity, 27 * self.n_nn),
                 cell_capacity=2 * c.cell_capacity,
                 subcell_capacity=2 * c.subcell_capacity)
-            self._build_fns()
+            self.backend_build_fns()
         else:
             self.nbr_capacity *= 2
         self._state = None
 
-    # -- eager / stateless entry point --------------------------------------
+    # -- ForceBackend entry point -------------------------------------------
 
     def _to_engine(self, e, f_nn, positions):
         e = e * self.units.energy_to_engine
@@ -224,13 +258,17 @@ class DeepmdForceProvider:
             f_nn.astype(positions.dtype))
         return e.astype(positions.dtype), forces
 
-    def __call__(self, positions: jax.Array, box: jax.Array):
-        """(energy kJ/mol, forces (N,3) kJ/mol/nm) with zeros off the group.
+    def compute(self, request: ForceRequest) -> ForceResult:
+        """:class:`~repro.backend.ForceBackend` entry point.
 
-        Eager calls with a positive skin reuse the cached state across calls
-        (rebuilding when the displacement check trips); traced calls — and
-        skin = 0 — run the fused per-step pipeline.
+        ``request.positions`` is the full engine-layout position array
+        (engine units); the result carries (energy kJ/mol, forces (N,3)
+        kJ/mol/nm) with zeros off the NN group.  Eager calls with a positive
+        skin reuse the cached state across calls (rebuilding when the
+        displacement check trips); traced calls — and skin = 0 — run the
+        fused per-step pipeline and trace straight through (jit-transparent).
         """
+        positions = request.positions
         traced = isinstance(positions, jax.core.Tracer)
         if self.stateful and not traced:
             if self._state is None:
@@ -251,8 +289,11 @@ class DeepmdForceProvider:
                 raise RuntimeError("special-force capacity still exceeded "
                                    "after 8 doublings")
             self.last_diag = {k: bool(jnp.any(v)) for k, v in flags.items()}
-            return e, forces
+            return ForceResult(energy=e, forces=forces,
+                               diagnostics=dict(self.last_diag),
+                               tenant=request.tenant, req_id=request.req_id)
         nn_pos = self._to_model(positions)
+        diag = {}
         if self._dist_fn is not None:
             e, f_nn, diag = self._dist_fn(self.params, nn_pos, self.nn_types)
             if not traced:
@@ -260,10 +301,32 @@ class DeepmdForceProvider:
                 # step the diag values are tracers and must not leak
                 self.last_diag = diag
         else:
-            e, f_nn = self._single_domain_forces(nn_pos)
-        return self._to_engine(e, f_nn, positions)
+            e, f_nn = self.backend_forces(nn_pos)
+        e, forces = self._to_engine(e, f_nn, positions)
+        return ForceResult(energy=e, forces=forces, diagnostics=dict(diag),
+                           tenant=request.tenant, req_id=request.req_id)
 
-    def _single_domain_forces(self, nn_pos: jax.Array):
+    # -- deprecated eager surface -------------------------------------------
+
+    _warned_eager_call = False
+
+    def __call__(self, positions: jax.Array, box: jax.Array):
+        """Deprecated eager entry point — use :meth:`compute` with a
+        :class:`~repro.backend.ForceRequest` instead.  Kept as a shim (warns
+        once per provider class) that routes through the protocol."""
+        cls = type(self)
+        if not cls._warned_eager_call:
+            cls._warned_eager_call = True
+            warnings.warn(
+                f"{cls.__name__}(positions, box) is deprecated; use "
+                f"{cls.__name__}.compute(ForceRequest(positions=..., "
+                "box=...)) — the ForceBackend protocol entry point",
+                DeprecationWarning, stacklevel=2)
+        res = self.compute(ForceRequest(positions=positions, box=box))
+        return res.energy, res.forces
+
+    def backend_forces(self, nn_pos: jax.Array):
+        """Hook: single-domain fused per-step forces (model units)."""
         return single_domain_forces(
             self.model, self.params, nn_pos, self.nn_types,
             self.box_model, self.nbr_capacity)

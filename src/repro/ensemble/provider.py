@@ -3,8 +3,10 @@
 ``BatchedDeepmdProvider`` is ``repro.core.DeepmdForceProvider`` lifted over
 a leading replica axis: positions arrive as (R, N, 3) and energies/forces
 return as (R,) / (R, N, 3).  The unit conversions, the stateful
-assemble/evaluate/grow protocol and the capacity-growth bookkeeping are all
-inherited — only the compute entry points change:
+assemble/evaluate/grow protocol (:class:`repro.backend.StatefulForceBackend`)
+and the capacity-growth bookkeeping are all inherited — the subclass
+overrides exactly the documented ``backend_*`` execution hooks (see the
+``DeepmdForceProvider`` docstring), nothing private:
 
 * distributed (``dd_config`` given): the replica-batched drivers from
   ``repro.core.ddinfer`` run on a 2-D (replica x dd) mesh, issuing one
@@ -39,6 +41,8 @@ from ..md.neighbors import needs_rebuild as _nlist_needs_rebuild
 class BatchedDeepmdProvider(DeepmdForceProvider):
     """Plugs into ``EnsembleEngine(special_force=...)``."""
 
+    batched = True  # ForceBackend capability flag: leading replica axis
+
     def __init__(self, model: DPModel, params, nn_indices: np.ndarray,
                  types, box, n_atoms: int, n_replicas: int,
                  dd_config: Optional[DDConfig] = None,
@@ -52,7 +56,7 @@ class BatchedDeepmdProvider(DeepmdForceProvider):
                          dd_config=dd_config, mesh=mesh, units=units,
                          nbr_capacity=nbr_capacity, skin=skin)
 
-    def _build_fns(self) -> None:
+    def backend_build_fns(self) -> None:
         if self.dd_config is not None:
             args = (self.model, self.dd_config, self.mesh, self.box_model,
                     self.n_nn, self.n_replicas)
@@ -66,27 +70,27 @@ class BatchedDeepmdProvider(DeepmdForceProvider):
         else:
             self._dist_fn = None
 
-    # -- vmapped single-domain path ----------------------------------------
+    # -- vmapped single-domain path (documented backend_* hook overrides) ---
 
-    def _single_domain_assemble(self, nn_pos: jax.Array):
+    def backend_assemble(self, nn_pos: jax.Array):
         return jax.vmap(lambda p: single_domain_state(
             self.model, p, self.box_model, self.nbr_capacity, self.skin))(
                 nn_pos)
 
-    def _single_domain_needs_rebuild(self, nn_pos: jax.Array, state):
+    def backend_needs_rebuild(self, nn_pos: jax.Array, state):
         return jax.vmap(lambda s, p: _nlist_needs_rebuild(
             s, p, self.box_model, self.skin))(state, nn_pos)
 
-    def _single_domain_evaluate(self, nn_pos: jax.Array, state):
+    def backend_evaluate(self, nn_pos: jax.Array, state):
         e, f_nn = jax.vmap(lambda p, s: single_domain_forces_nlist(
             self.model, self.params, p, self.nn_types, self.box_model, s))(
                 nn_pos, state)
         flags = {"overflow": state.overflow,
-                 "needs_rebuild": self._single_domain_needs_rebuild(
+                 "needs_rebuild": self.backend_needs_rebuild(
                      nn_pos, state)}
         return e, f_nn, flags
 
-    def _single_domain_forces(self, nn_pos: jax.Array):
+    def backend_forces(self, nn_pos: jax.Array):
         return single_domain_forces_batched(
             self.model, self.params, nn_pos, self.nn_types, self.box_model,
             self.nbr_capacity)

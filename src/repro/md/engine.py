@@ -37,6 +37,7 @@ from typing import Callable, Optional, Protocol
 import jax
 import jax.numpy as jnp
 
+from ..backend import ForceRequest
 from . import observables
 from .forcefield import ForceFieldConfig, classical_energy
 from .integrators import MDState, init_velocities, leapfrog_step, berendsen_rescale
@@ -45,7 +46,12 @@ from .system import System
 
 
 class ForceProvider(Protocol):
-    """NNPot-style special-force provider (paper Sec. IV-A)."""
+    """NNPot-style special-force provider (paper Sec. IV-A).
+
+    The engine prefers the typed :class:`repro.backend.ForceBackend`
+    surface (``compute(ForceRequest) -> ForceResult``, plus the stateful
+    assemble/evaluate split when ``stateful`` is true) and falls back to
+    this legacy eager callable for plain-function providers."""
 
     def __call__(self, positions: jax.Array, box: jax.Array) -> tuple[jax.Array, jax.Array]:
         """Returns (energy, forces(N,3)); forces are zero off the NN group."""
@@ -94,6 +100,10 @@ class MDEngine:
         self.config = config
         self.special_force = special_force
         self._stateful = bool(getattr(special_force, "stateful", False))
+        # host_side backends (ForceBackend capability flag, e.g. the serving
+        # client) block on host round-trips and must not be fused into
+        # jitted windows: force the per-step host loop for them
+        self._host_special = bool(getattr(special_force, "host_side", False))
         self._cell_cap_scale = 1.0
         self._build_fns()
         self._window_cache: dict[int, Callable] = {}
@@ -108,6 +118,16 @@ class MDEngine:
                                   "window_reruns": 0}
 
     # -- construction ------------------------------------------------------
+
+    def _eval_special_stateless(self, positions, box):
+        """Per-step special force through the ForceBackend protocol
+        (``compute`` with a typed request); legacy plain callables keep the
+        eager two-tuple convention.  Jit-transparent either way."""
+        special = self.special_force
+        if hasattr(special, "compute"):
+            res = special.compute(ForceRequest(positions=positions, box=box))
+            return res.energy, res.forces
+        return special(positions, box)
 
     def _classical_one(self, pos, nlist):
         """Single-trajectory classical forces — the one definition both the
@@ -172,7 +192,8 @@ class MDEngine:
                 sp_state, e_sp, f_sp, sp_ovf = jax.lax.cond(
                     jnp.any(sp_rb), rebuilt, kept, state.positions, sp_state)
             else:
-                e_sp, f_sp = special(state.positions, system.box)
+                e_sp, f_sp = self._eval_special_stateless(state.positions,
+                                                          system.box)
             f = f + f_sp
         new = self._integrate_fn(state, f)
         return new, nlist, sp_state, e_cl, e_sp, rb, sp_rb, sp_ovf
@@ -369,7 +390,8 @@ class MDEngine:
                         e_sp, f_sp, fl = special.evaluate(state.positions,
                                                           sp_state)
                 else:
-                    e_sp, f_sp = special(state.positions, system.box)
+                    e_sp, f_sp = self._eval_special_stateless(
+                        state.positions, system.box)
                 f = f + f_sp
                 jax.block_until_ready(f)
                 self.timings["special"] += time.perf_counter() - t0
@@ -405,7 +427,7 @@ class MDEngine:
 
             k = self._segment_len(i, self._abs_step(state), n_steps,
                                   observe is not None, observe_every)
-            if cfg.loop_mode == "step":
+            if cfg.loop_mode == "step" or self._host_special:
                 state, nlist, sp_state, e_cl, e_sp = self._run_segment_step(
                     state, nlist, sp_state, k)
             else:

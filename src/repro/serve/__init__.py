@@ -1,0 +1,25 @@
+"""Force-inference-as-a-service: multi-tenant batched DP force serving.
+
+The paper's profiling shows >90% of MD wall time is DeePMD inference, so the
+force evaluator — not the simulation — is the natural unit to scale.  This
+package stands a resident jitted evaluator behind a request queue that
+*continuously batches* force calls from many independent client simulations
+(the repo's LM serving idiom repurposed for MD):
+
+* :class:`ForceServer` — bounded request queue, a batching worker that
+  groups requests into a few compiled (batch x atoms) shape buckets,
+  per-tenant metrics, per-request deadlines, graceful degradation;
+* :class:`RemoteForceProvider` — the client stub: a drop-in
+  ``MDEngine(special_force=...)`` provider implementing the
+  :class:`repro.backend.ForceBackend` protocol (jit-transparent via
+  ``jax.pure_callback``);
+* :mod:`repro.serve.batching` — shape-bucket selection and padding;
+* :mod:`repro.serve.metrics` — per-tenant queue-depth / latency / rps.
+"""
+from ..backend import (ForceBackend, ForceRequest, ForceResult,  # noqa: F401
+                       StatefulForceBackend)
+from .batching import BucketingConfig, choose_bucket, pad_group  # noqa: F401
+from .client import RemoteForceProvider  # noqa: F401
+from .metrics import MetricsRegistry, TenantMetrics  # noqa: F401
+from .server import (ForceFuture, ForceServer, ServerOverloaded,  # noqa: F401
+                     ServeConfig)

@@ -1,0 +1,130 @@
+"""RemoteForceProvider: the client stub for :class:`repro.serve.ForceServer`.
+
+A drop-in ``MDEngine(special_force=...)`` provider implementing the
+:class:`repro.backend.ForceBackend` protocol whose evaluator lives in a
+shared force server instead of this simulation.  It mirrors the data-layout
+responsibilities of ``DeepmdForceProvider`` — extract the marked NN group,
+convert engine units to model units, wrap into the model box, scatter the
+returned forces back into engine layout — but ships the converted group over
+the :class:`~repro.backend.ForceRequest` wire format rather than calling the
+model itself.
+
+The provider advertises ``host_side = True``: the engine evaluates it
+eagerly in its per-step host loop instead of fusing it into jitted scan
+windows.  When a shared in-process server is used, the client blocks inside
+the force round-trip while the server thread runs its own device dispatch —
+buried inside a large fused computation that blocking wait can starve the
+device executor (the enclosing computation holds it while the server's
+dispatch waits for it).  Traced positions are still handled — ``compute``
+escapes the trace with ``jax.pure_callback`` — so small jitted drivers
+(including ``jax.jit`` wrappers around a force call) keep working; only the
+engine's deeply fused windows must stay host-side.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..backend import ForceRequest, ForceResult
+from ..core.nnpot import UnitConversion
+from .server import ForceServer
+
+
+class RemoteForceProvider:
+    """ForceBackend whose evaluator is a (shared, multi-tenant) server.
+
+    Stateless by construction: neighbor state lives server-side per request
+    (the padded-bucket evaluator rebuilds it each call), so the engine drives
+    the simple per-step path — no assemble/evaluate split to coordinate over
+    the wire.
+    """
+
+    stateful = False   # no client-side reusable state
+    batched = False    # one simulation per provider; batching is the server's
+    host_side = True   # engine must call eagerly (see module docstring)
+
+    def __init__(self, server: ForceServer, nn_indices: np.ndarray,
+                 types, box, n_atoms: int,
+                 units: UnitConversion = UnitConversion(),
+                 tenant: str = "default",
+                 timeout_s: Optional[float] = None):
+        self.server = server
+        self.nn_indices = np.asarray(nn_indices, np.int32)
+        self.n_nn = len(self.nn_indices)
+        self.n_atoms = n_atoms
+        self.units = units
+        self.tenant = tenant
+        self.timeout_s = timeout_s
+        self.nn_types = np.asarray(types, np.int32)[self.nn_indices]
+        self.box_model = (np.asarray(box, np.float32)
+                          * units.length_to_model)
+        self.last_diag: Optional[dict] = None
+
+    # -- host-side round trip ----------------------------------------------
+
+    def _host_eval(self, positions: np.ndarray):
+        """Concrete positions (engine layout/units) -> (energy, forces)."""
+        pos = np.asarray(positions)
+        dtype = pos.dtype
+        nn_pos = (pos[self.nn_indices].astype(np.float32)
+                  * self.units.length_to_model)
+        nn_pos = np.mod(nn_pos, self.box_model)
+        res: ForceResult = self.server.compute(
+            ForceRequest(positions=nn_pos, box=self.box_model,
+                         types=self.nn_types, tenant=self.tenant),
+            timeout=self.timeout_s)
+        self.last_diag = dict(res.diagnostics)
+        if not res.ok:
+            raise RuntimeError(
+                f"force server failed request for tenant "
+                f"{self.tenant!r}: {res.error}")
+        energy = np.asarray(res.energy, np.float64)
+        energy = (energy * self.units.energy_to_engine).astype(dtype)
+        f_nn = np.asarray(res.forces) * self.units.force_to_engine
+        forces = np.zeros((self.n_atoms, 3), dtype)
+        forces[self.nn_indices] = f_nn.astype(dtype)
+        return energy.reshape(()), forces
+
+    # -- ForceBackend entry point -------------------------------------------
+
+    def compute(self, request: ForceRequest) -> ForceResult:
+        """Engine-facing entry point (full engine-layout positions).
+
+        Traced positions (the engine's jitted windows) go through
+        ``jax.pure_callback`` so the host round-trip runs at execution time;
+        eager positions round-trip directly.
+        """
+        positions = request.positions
+        if isinstance(positions, jax.core.Tracer):
+            e, f = jax.pure_callback(
+                self._host_eval,
+                (jax.ShapeDtypeStruct((), positions.dtype),
+                 jax.ShapeDtypeStruct((self.n_atoms, 3), positions.dtype)),
+                positions)
+        else:
+            e, f = self._host_eval(np.asarray(positions))
+            e, f = jnp.asarray(e), jnp.asarray(f)
+        return ForceResult(energy=e, forces=f,
+                           diagnostics=dict(self.last_diag or {}),
+                           tenant=request.tenant, req_id=request.req_id)
+
+    # -- deprecated eager surface -------------------------------------------
+
+    _warned_eager_call = False
+
+    def __call__(self, positions: jax.Array, box: jax.Array):
+        """Deprecated eager entry point — use :meth:`compute`."""
+        import warnings
+        cls = type(self)
+        if not cls._warned_eager_call:
+            cls._warned_eager_call = True
+            warnings.warn(
+                f"{cls.__name__}(positions, box) is deprecated; use "
+                f"{cls.__name__}.compute(ForceRequest(positions=..., "
+                "box=...)) — the ForceBackend protocol entry point",
+                DeprecationWarning, stacklevel=2)
+        res = self.compute(ForceRequest(positions=positions, box=box))
+        return res.energy, res.forces

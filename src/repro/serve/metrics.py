@@ -1,0 +1,115 @@
+"""Per-tenant serving metrics: queue depth, latency, requests per second.
+
+Host-side bookkeeping only (never traced): the server worker updates these
+under a lock as requests move through submit -> batch -> complete.  A tenant
+is any client stream sharing one accounting id; the registry keeps one
+:class:`TenantMetrics` per id plus an aggregate view.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import time
+
+
+class TenantMetrics:
+    """Counters + latency/rate stats for one tenant."""
+
+    def __init__(self, window_s: float = 5.0):
+        self.window_s = window_s
+        self.submitted = 0
+        self.completed = 0
+        self.timeouts = 0          # dropped past deadline / client gave up
+        self.errors = 0            # evaluator failures, overflow rejections
+        self.rejected = 0          # backpressure: queue-full rejections
+        self.queue_depth = 0       # currently queued (submitted, not done)
+        self.max_queue_depth = 0
+        self.total_latency_s = 0.0
+        self.max_latency_s = 0.0
+        self._done_times = collections.deque()   # completion stamps (rps)
+
+    # -- transitions (caller holds the registry lock) -----------------------
+
+    def on_submit(self) -> None:
+        self.submitted += 1
+        self.queue_depth += 1
+        self.max_queue_depth = max(self.max_queue_depth, self.queue_depth)
+
+    def on_reject(self) -> None:
+        self.rejected += 1
+
+    def _settle(self, latency_s: float) -> None:
+        self.queue_depth = max(0, self.queue_depth - 1)
+        self.total_latency_s += latency_s
+        self.max_latency_s = max(self.max_latency_s, latency_s)
+
+    def on_complete(self, latency_s: float) -> None:
+        self.completed += 1
+        self._settle(latency_s)
+        now = time.monotonic()
+        self._done_times.append(now)
+        cutoff = now - self.window_s
+        while self._done_times and self._done_times[0] < cutoff:
+            self._done_times.popleft()
+
+    def on_timeout(self, latency_s: float) -> None:
+        self.timeouts += 1
+        self._settle(latency_s)
+
+    def on_error(self, latency_s: float) -> None:
+        self.errors += 1
+        self._settle(latency_s)
+
+    # -- views --------------------------------------------------------------
+
+    def rps(self) -> float:
+        """Completions per second over the trailing window."""
+        cutoff = time.monotonic() - self.window_s
+        done = sum(1 for t in self._done_times if t >= cutoff)
+        return done / self.window_s
+
+    def mean_latency_s(self) -> float:
+        settled = self.completed + self.timeouts + self.errors
+        return self.total_latency_s / settled if settled else 0.0
+
+    def snapshot(self) -> dict:
+        return {
+            "submitted": self.submitted, "completed": self.completed,
+            "timeouts": self.timeouts, "errors": self.errors,
+            "rejected": self.rejected, "queue_depth": self.queue_depth,
+            "max_queue_depth": self.max_queue_depth,
+            "mean_latency_s": self.mean_latency_s(),
+            "max_latency_s": self.max_latency_s,
+            "rps": self.rps(),
+        }
+
+
+class MetricsRegistry:
+    """Thread-safe per-tenant metrics table."""
+
+    def __init__(self, window_s: float = 5.0):
+        self.window_s = window_s
+        self._lock = threading.Lock()
+        self._tenants: dict[str, TenantMetrics] = {}
+
+    def tenant(self, tenant: str) -> TenantMetrics:
+        with self._lock:
+            if tenant not in self._tenants:
+                self._tenants[tenant] = TenantMetrics(self.window_s)
+            return self._tenants[tenant]
+
+    def update(self, tenant: str, event: str, *args) -> None:
+        with self._lock:
+            tm = self._tenants.setdefault(tenant,
+                                          TenantMetrics(self.window_s))
+            getattr(tm, "on_" + event)(*args)
+
+    def snapshot(self) -> dict[str, dict]:
+        with self._lock:
+            return {t: m.snapshot() for t, m in self._tenants.items()}
+
+    def totals(self) -> dict:
+        snap = self.snapshot()
+        keys = ("submitted", "completed", "timeouts", "errors", "rejected",
+                "queue_depth")
+        return {k: sum(s[k] for s in snap.values()) for k in keys}

@@ -1,0 +1,318 @@
+"""ForceServer: a resident jitted DP evaluator behind a batching queue.
+
+One process-wide evaluator serves force calls from many independent client
+simulations (threads in-process today; the wire format is
+:class:`repro.backend.ForceRequest`, so a transport can be bolted on
+without touching the batching core).  The serving loop is the LM serving
+idiom (``repro.lm.serve_lib``) transplanted to MD:
+
+  submit -> bounded queue -> batching worker -> shape bucket -> pad ->
+  one vmapped jitted dispatch -> per-request results
+
+Scheduling policy ("continuous batching", paper's >90%-inference argument):
+the worker takes whatever is queued the moment it frees up — it waits at
+most ``batch_window_s`` to let stragglers join, then pads the group to the
+nearest compiled (batch x atoms) bucket and dispatches.  Clients blocked on
+their own previous step naturally re-synchronize on the next batch, so N
+concurrent simulations ride one dispatch instead of N.
+
+Degradation is per-request, never global: a request past its deadline is
+answered ``ok=False`` without consuming compute (a stalled tenant cannot
+wedge the batch), a full queue rejects at submit time
+(:class:`ServerOverloaded` backpressure), an evaluator failure or a
+neighbor-capacity overflow errors only the affected rows, and every outcome
+lands in the per-tenant metrics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import queue
+import threading
+import time
+from typing import Optional
+
+import jax
+import numpy as np
+
+from ..backend import ForceRequest, ForceResult
+from ..core.ddinfer import make_padded_batch_fn
+from ..dp.model import DPModel
+from .batching import BucketingConfig, choose_bucket, pad_group
+from .metrics import MetricsRegistry
+
+
+class ServerOverloaded(RuntimeError):
+    """Backpressure: the bounded request queue is full — retry later."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Serving knobs (see README "Force serving" knob matrix)."""
+
+    atom_buckets: tuple[int, ...] = (64, 128, 256)   # compiled atom shapes
+    batch_buckets: tuple[int, ...] = (1, 2, 4, 8)    # compiled batch shapes
+    queue_bound: int = 64          # max queued requests before rejection
+    batch_window_s: float = 0.002  # max straggler wait (0 = drain, no wait)
+    default_timeout_s: float = 30.0    # deadline when the request has none
+    nbr_capacity: int = 64         # neighbor capacity per atom bucket
+    metrics_window_s: float = 5.0  # trailing rps window
+
+    @property
+    def bucketing(self) -> BucketingConfig:
+        return BucketingConfig(self.atom_buckets, self.batch_buckets)
+
+
+class ForceFuture:
+    """Client handle for one in-flight request."""
+
+    def __init__(self, request: ForceRequest):
+        self.request = request
+        self.t_submit = time.monotonic()
+        self._event = threading.Event()
+        self._result: Optional[ForceResult] = None
+
+    def _deliver(self, result: ForceResult) -> None:
+        self._result = result
+        self._event.set()
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> ForceResult:
+        """Block until the server answers; raises ``TimeoutError`` when the
+        wait budget runs out first (the server will still settle the request
+        as a deadline drop — metrics stay consistent)."""
+        if not self._event.wait(timeout):
+            raise TimeoutError(
+                f"force request {self.request.req_id} "
+                f"(tenant {self.request.tenant!r}) not answered "
+                f"within {timeout}s")
+        return self._result
+
+
+def _zeros_result(req: ForceRequest, error: str, **diag) -> ForceResult:
+    n = req.n_atoms
+    return ForceResult(
+        energy=np.zeros((), np.float32),
+        forces=np.zeros((n, 3), np.float32),
+        diagnostics=diag, tenant=req.tenant, req_id=req.req_id,
+        ok=False, error=error)
+
+
+class ForceServer:
+    """Multi-tenant batched force-inference server (in-process).
+
+    ``model``/``params`` define the resident evaluator; all requests are in
+    *model* units and NN-group layout (the client stub owns unit conversion
+    and engine-layout scatter, mirroring ``DeepmdForceProvider``).
+
+    ``executor_factory`` swaps the execution engine per compiled shape:
+    called as ``factory(n_bucket, batch_bucket)`` it must return
+    ``fn(params, coords (B, nb, 3), types (B, nb), mask (B, nb),
+    box (B, 3)) -> (energy (B,), forces (B, nb, 3), overflow (B,))``.
+    The default wraps :func:`repro.core.ddinfer.make_padded_batch_fn`
+    (single-device vmap); a multi-device deployment injects a factory
+    built on the distributed batched drivers (``make_batched_force_fn``)
+    so every batch rides one sharded dispatch.
+    """
+
+    def __init__(self, model: DPModel, params, config: ServeConfig = None,
+                 executor_factory=None):
+        self.model = model
+        self.params = params
+        self.config = config or ServeConfig()
+        self.config.bucketing  # validate bucket lists early
+        self.metrics = MetricsRegistry(self.config.metrics_window_s)
+        self._queue: queue.Queue = queue.Queue(self.config.queue_bound)
+        self._executor_factory = executor_factory
+        self._fns: dict = {}          # (atom, batch) bucket -> executor
+        self._default_fns: dict = {}  # atom bucket -> shared jitted eval
+        self._req_ids = itertools.count()
+        self._stop = threading.Event()
+        self._worker = threading.Thread(target=self._serve_loop,
+                                        name="force-server", daemon=True)
+        self._worker.start()
+
+    # -- client surface -----------------------------------------------------
+
+    def submit(self, request: ForceRequest,
+               timeout: Optional[float] = None) -> ForceFuture:
+        """Enqueue one request; returns a :class:`ForceFuture`.
+
+        Raises :class:`ServerOverloaded` when the bounded queue is full —
+        the client should back off, not the server.  ``timeout`` (or the
+        config default) becomes the request deadline when it has none.
+        """
+        if self._stop.is_set():
+            raise RuntimeError("server is stopped")
+        if request.req_id == 0:
+            request.req_id = next(self._req_ids) + 1
+        if request.deadline is None:
+            budget = (timeout if timeout is not None
+                      else self.config.default_timeout_s)
+            request.deadline = time.monotonic() + budget
+        fut = ForceFuture(request)
+        try:
+            self._queue.put_nowait(fut)
+        except queue.Full:
+            self.metrics.update(request.tenant, "reject")
+            raise ServerOverloaded(
+                f"queue full ({self.config.queue_bound} requests); "
+                f"tenant {request.tenant!r} must back off") from None
+        self.metrics.update(request.tenant, "submit")
+        return fut
+
+    def compute(self, request: ForceRequest,
+                timeout: Optional[float] = None) -> ForceResult:
+        """Synchronous submit + wait (the client stub's hot path)."""
+        budget = (timeout if timeout is not None
+                  else self.config.default_timeout_s)
+        return self.submit(request, timeout=budget).result(budget + 1.0)
+
+    def evaluate_direct(self, request: ForceRequest) -> ForceResult:
+        """Bypass the queue: evaluate one request alone (B=1 compiled
+        shape).  The looped baseline the benchmarks compare continuous
+        batching against; also handy for offline parity checks."""
+        out = self._run_bucket([request],
+                               choose_bucket(request.n_atoms,
+                                             self.config.atom_buckets))
+        return out[0]
+
+    def warmup(self, n_atoms: Optional[int] = None,
+               batch_sizes: Optional[tuple] = None) -> None:
+        """Pre-compile bucket executables so live traffic never pays a
+        cold-start compile.  Compiles every (atom bucket x batch bucket)
+        pair by default; pass ``n_atoms`` to warm only its atom bucket."""
+        cfg = self.config
+        buckets = (cfg.atom_buckets if n_atoms is None
+                   else (choose_bucket(n_atoms, cfg.atom_buckets),))
+        for nb in buckets:
+            for b in (batch_sizes or cfg.batch_buckets):
+                # all-masked padding rows: the cheapest valid input with the
+                # right compiled shape
+                jax.block_until_ready(self._bucket_fn(nb, b)(
+                    self.params,
+                    np.zeros((b, nb, 3), np.float32),
+                    np.zeros((b, nb), np.int32),
+                    np.zeros((b, nb), np.float32),
+                    np.ones((b, 3), np.float32)))
+
+    def stop(self, drain_timeout_s: float = 5.0) -> None:
+        """Stop the worker; queued-but-unserved requests error out."""
+        self._stop.set()
+        self._worker.join(drain_timeout_s)
+        while True:
+            try:
+                fut = self._queue.get_nowait()
+            except queue.Empty:
+                break
+            self._settle(fut, _zeros_result(fut.request, "server stopped"),
+                         "error")
+
+    # -- serving loop -------------------------------------------------------
+
+    def _serve_loop(self) -> None:
+        cfg = self.config
+        while not self._stop.is_set():
+            try:
+                first = self._queue.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            batch = [first]
+            window_end = time.monotonic() + cfg.batch_window_s
+            while len(batch) < cfg.bucketing.max_batch:
+                # window 0 = pure continuous batching: take whatever is
+                # already queued, never wait for stragglers
+                if cfg.batch_window_s <= 0:
+                    try:
+                        batch.append(self._queue.get_nowait())
+                    except queue.Empty:
+                        break
+                    continue
+                remaining = window_end - time.monotonic()
+                if remaining <= 0:
+                    break
+                try:
+                    batch.append(self._queue.get(timeout=remaining))
+                except queue.Empty:
+                    break
+            self._dispatch(batch)
+
+    def _dispatch(self, batch: list[ForceFuture]) -> None:
+        now = time.monotonic()
+        groups: dict[int, list[ForceFuture]] = {}
+        for fut in batch:
+            req = fut.request
+            # a stalled tenant's expired request degrades to ok=False here,
+            # before any padding/compute — it cannot wedge the batch
+            if req.deadline is not None and now > req.deadline:
+                self._settle(fut, _zeros_result(req, "deadline exceeded"),
+                             "timeout")
+                continue
+            try:
+                nb = choose_bucket(req.n_atoms, self.config.atom_buckets)
+            except ValueError as e:
+                self._settle(fut, _zeros_result(req, str(e)), "error")
+                continue
+            groups.setdefault(nb, []).append(fut)
+        for nb, futs in groups.items():
+            try:
+                results = self._run_bucket([f.request for f in futs], nb)
+            except Exception as e:  # noqa: BLE001 — degrade, keep serving
+                for fut in futs:
+                    self._settle(fut, _zeros_result(
+                        fut.request, f"evaluator failed: {e}"), "error")
+                continue
+            for fut, res in zip(futs, results):
+                self._settle(fut, res,
+                             "complete" if res.ok else "error",)
+
+    def _settle(self, fut: ForceFuture, result: ForceResult,
+                event: str) -> None:
+        latency = time.monotonic() - fut.t_submit
+        result.diagnostics.setdefault("latency_s", latency)
+        self.metrics.update(fut.request.tenant, event, latency)
+        fut._deliver(result)
+
+    # -- bucket execution ---------------------------------------------------
+
+    def _bucket_fn(self, n_bucket: int, batch_bucket: int):
+        key = (n_bucket, batch_bucket)
+        if key not in self._fns:
+            if self._executor_factory is not None:
+                self._fns[key] = self._executor_factory(n_bucket,
+                                                        batch_bucket)
+            else:
+                # the default vmap executor is batch-agnostic once jitted —
+                # share one callable across batch buckets
+                if n_bucket not in self._default_fns:
+                    self._default_fns[n_bucket] = make_padded_batch_fn(
+                        self.model, n_bucket, self.config.nbr_capacity)
+                self._fns[key] = self._default_fns[n_bucket]
+        return self._fns[key]
+
+    def _run_bucket(self, requests: list[ForceRequest],
+                    n_bucket: int) -> list[ForceResult]:
+        """Pad one same-bucket group to a compiled shape and evaluate."""
+        coords, types, mask, box = pad_group(
+            requests, n_bucket, self.config.batch_buckets)
+        e, f, ovf = self._bucket_fn(n_bucket, coords.shape[0])(
+            self.params, coords, types, mask, box)
+        e, f, ovf = jax.device_get((e, f, ovf))
+        out = []
+        for i, req in enumerate(requests):
+            n = req.n_atoms
+            diag = {"n_bucket": n_bucket, "batch_bucket": coords.shape[0],
+                    "batch_size": len(requests),
+                    "overflow": bool(ovf[i])}
+            if ovf[i]:
+                out.append(_zeros_result(
+                    req, f"neighbor capacity {self.config.nbr_capacity} "
+                    "overflowed (forces would be truncated)", **diag))
+            else:
+                out.append(ForceResult(
+                    energy=np.asarray(e[i], np.float32),
+                    forces=np.asarray(f[i, :n], np.float32),
+                    diagnostics=diag, tenant=req.tenant, req_id=req.req_id))
+        return out

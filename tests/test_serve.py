@@ -1,0 +1,300 @@
+"""Force serving: protocol conformance, shape-bucket padding parity, the
+batching server (metrics / timeouts / backpressure), and the acceptance
+path — MDEngine running unmodified physics through RemoteForceProvider
+against an in-process server, matching the local DeepmdForceProvider."""
+import threading
+import time
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.backend import (ForceBackend, ForceRequest, ForceResult,
+                           StatefulForceBackend)
+from repro.core import DeepmdForceProvider
+from repro.core.ddinfer import make_padded_batch_fn, single_domain_forces
+from repro.dp import DPConfig, DPModel, DescriptorConfig
+from repro.md import (EngineConfig, MDEngine, build_solvated_protein,
+                      mark_nn_group)
+from repro.serve import (BucketingConfig, ForceServer, RemoteForceProvider,
+                         ServeConfig, ServerOverloaded, choose_bucket,
+                         pad_group)
+
+RNG = np.random.default_rng(7)
+
+
+@pytest.fixture(scope="module")
+def model_params():
+    desc = DescriptorConfig(kind="dpa1", rcut=0.6, rcut_smth=0.3, sel=32,
+                            ntypes=4, neuron=(8, 16), axis_neuron=4,
+                            attn_layers=1, attn_hidden=16, attn_heads=2)
+    model = DPModel(DPConfig(descriptor=desc, fitting_neuron=(16, 16)))
+    params = model.init_params(jax.random.PRNGKey(0))
+    return model, params
+
+
+def _random_request(n, box_l=2.5, tenant="t"):
+    return ForceRequest(
+        positions=RNG.uniform(0, box_l, (n, 3)).astype(np.float32),
+        box=np.full(3, box_l, np.float32),
+        types=RNG.integers(0, 4, n).astype(np.int32), tenant=tenant)
+
+
+# -- protocol conformance ---------------------------------------------------
+
+def test_protocol_isinstance(model_params):
+    model, params = model_params
+    n = 24
+    types = RNG.integers(0, 4, n).astype(np.int32)
+    box = np.full(3, 2.5, np.float32)
+    local = DeepmdForceProvider(model, params, np.arange(n), types, box, n,
+                                nbr_capacity=48)
+    assert isinstance(local, ForceBackend)
+    assert isinstance(local, StatefulForceBackend)
+    assert local.batched is False and local.host_side is False
+
+    from repro.ensemble import BatchedDeepmdProvider
+    batched = BatchedDeepmdProvider(model, params, np.arange(n), types, box,
+                                    n, n_replicas=2, nbr_capacity=48)
+    assert isinstance(batched, ForceBackend)
+    assert batched.batched is True
+
+    server = ForceServer(model, params, ServeConfig(
+        atom_buckets=(32,), batch_buckets=(1, 2), nbr_capacity=48))
+    try:
+        remote = RemoteForceProvider(server, np.arange(n), types, box, n)
+        assert isinstance(remote, ForceBackend)
+        assert not isinstance(remote, StatefulForceBackend)
+        assert remote.host_side is True and remote.stateful is False
+    finally:
+        server.stop()
+
+
+def test_deprecated_call_warns_once_and_matches_compute(model_params):
+    model, params = model_params
+    n = 24
+    req = _random_request(n)
+    prov = DeepmdForceProvider(model, params, np.arange(n), req.types,
+                               req.box, n, nbr_capacity=48)
+    DeepmdForceProvider._warned_eager_call = False
+    with pytest.warns(DeprecationWarning, match="compute"):
+        e0, f0 = prov(jnp.asarray(req.positions), jnp.asarray(req.box))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # second call must not warn again
+        e1, f1 = prov(jnp.asarray(req.positions), jnp.asarray(req.box))
+    res = prov.compute(ForceRequest(positions=jnp.asarray(req.positions),
+                                    box=jnp.asarray(req.box)))
+    np.testing.assert_array_equal(np.asarray(e0), np.asarray(res.energy))
+    np.testing.assert_array_equal(np.asarray(f0), np.asarray(res.forces))
+    np.testing.assert_array_equal(np.asarray(e1), np.asarray(e0))
+    np.testing.assert_array_equal(np.asarray(f1), np.asarray(f0))
+
+
+# -- bucketing / padding ----------------------------------------------------
+
+def test_choose_bucket():
+    assert choose_bucket(1, (64, 128)) == 64
+    assert choose_bucket(64, (64, 128)) == 64
+    assert choose_bucket(65, (64, 128)) == 128
+    with pytest.raises(ValueError):
+        choose_bucket(129, (64, 128))
+    with pytest.raises(ValueError):
+        BucketingConfig(atom_buckets=(128, 64))
+
+
+def test_pad_group_layout():
+    reqs = [_random_request(24), _random_request(17)]
+    coords, types, mask, box = pad_group(reqs, 32, (1, 2, 4))
+    assert coords.shape == (2, 32, 3) and types.shape == (2, 32)
+    np.testing.assert_array_equal(mask[0], [1.0] * 24 + [0.0] * 8)
+    np.testing.assert_array_equal(mask[1], [1.0] * 17 + [0.0] * 15)
+    np.testing.assert_array_equal(coords[0, :24], reqs[0].positions)
+    assert (coords[0, 24:] == 0).all()
+
+
+def test_padded_bucket_parity(model_params):
+    """Padded bucketed heterogeneous batch must match per-request unbatched
+    evaluation within the repo's established fp32 tolerances, including a
+    masked all-padding row (batch 3 padded up to batch bucket 4)."""
+    model, params = model_params
+    reqs = [_random_request(24), _random_request(40), _random_request(64)]
+    n_bucket, cap = 64, 48
+    fn = make_padded_batch_fn(model, n_bucket, cap)
+    coords, types, mask, box = pad_group(reqs, n_bucket, (1, 2, 4))
+    assert coords.shape[0] == 4  # 3 requests padded to batch bucket 4
+    e, f, ovf = jax.device_get(fn(params, coords, types, mask, box))
+    assert not ovf.any()
+    for i, req in enumerate(reqs):
+        n = req.n_atoms
+        e_ref, f_ref = single_domain_forces(
+            model, params, jnp.asarray(req.positions),
+            jnp.asarray(req.types), jnp.asarray(req.box), cap)
+        scale = max(float(jnp.abs(f_ref).max()), 1e-8)
+        np.testing.assert_allclose(e[i], float(e_ref), rtol=1e-5,
+                                   atol=1e-5 * max(abs(float(e_ref)), 1.0))
+        np.testing.assert_allclose(f[i, :n], np.asarray(f_ref),
+                                   rtol=1e-5, atol=1e-5 * scale)
+        # padding atoms past n must carry exactly zero force
+        if n < n_bucket:
+            assert np.abs(f[i, n:]).max() == 0.0
+    # the all-padding row contributes nothing and stays finite
+    assert np.abs(f[3]).max() == 0.0 and np.isfinite(e[3])
+
+
+# -- server: batching, metrics, degradation ---------------------------------
+
+def test_server_concurrent_tenants(model_params):
+    model, params = model_params
+    server = ForceServer(model, params, ServeConfig(
+        atom_buckets=(32,), batch_buckets=(1, 2, 4), nbr_capacity=48,
+        batch_window_s=0.005))
+    try:
+        ref = server.compute(_random_request(24))  # warm the bucket
+        assert ref.ok
+
+        results = {}
+
+        def client(tid, n_req=4):
+            out = []
+            for _ in range(n_req):
+                res = server.compute(_random_request(24, tenant=f"t{tid}"))
+                out.append(res)
+            results[tid] = out
+
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(3)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert all(r.ok for out in results.values() for r in out)
+        snap = server.metrics.snapshot()
+        for tid in range(3):
+            s = snap[f"t{tid}"]
+            assert s["submitted"] == s["completed"] == 4
+            assert s["timeouts"] == s["errors"] == s["rejected"] == 0
+            assert s["mean_latency_s"] > 0
+        # concurrent clients should have shared at least one batch dispatch
+        batched = [r.diagnostics["batch_size"]
+                   for out in results.values() for r in out]
+        assert max(batched) >= 1  # diagnostics present and sane
+        totals = server.metrics.totals()
+        assert totals["completed"] == 13 and totals["queue_depth"] == 0
+    finally:
+        server.stop()
+
+
+def test_server_deadline_and_backpressure(model_params):
+    model, params = model_params
+    server = ForceServer(model, params, ServeConfig(
+        atom_buckets=(32,), batch_buckets=(1, 2), nbr_capacity=48,
+        queue_bound=1, batch_window_s=0.001))
+    try:
+        server.compute(_random_request(8))  # warm the compiled bucket
+
+        # expired deadline degrades to ok=False without wedging the server
+        req = _random_request(8, tenant="late")
+        req.deadline = time.monotonic() - 1.0
+        res = server.submit(req).result(10.0)
+        assert not res.ok and "deadline" in res.error
+        assert server.metrics.tenant("late").timeouts == 1
+
+        # stall the evaluator so the bounded queue fills -> ServerOverloaded
+        real_fn = server._bucket_fn(32, 1)
+        release = threading.Event()
+
+        def slow_fn(*args):
+            release.wait(10.0)
+            return real_fn(*args)
+
+        for b in server.config.batch_buckets:
+            server._fns[(32, b)] = slow_fn
+        futs = [server.submit(_random_request(8, tenant="burst"))]
+        time.sleep(0.2)  # let the worker take it and block in slow_fn
+        futs.append(server.submit(_random_request(8, tenant="burst")))
+        with pytest.raises(ServerOverloaded):
+            # queue (bound 1) already holds one waiting request
+            server.submit(_random_request(8, tenant="burst"))
+        assert server.metrics.tenant("burst").rejected == 1
+        release.set()
+        assert all(f.result(20.0).ok for f in futs)
+        # an oversized request is rejected per-request, not fatally
+        big = server.compute(_random_request(50, tenant="big"))
+        assert not big.ok and "exceeds" in big.error
+    finally:
+        server.stop()
+
+
+# -- acceptance: MDEngine through the served backend ------------------------
+
+def test_engine_through_remote_matches_local(model_params):
+    """Unmodified physics through RemoteForceProvider + in-process server
+    must match the local DeepmdForceProvider path within fp32 tolerances."""
+    model, params = model_params
+    system, pos, nn_idx = build_solvated_protein(6, water_per_protein_atom=2.0)
+    system = mark_nn_group(system, nn_idx)
+    local = DeepmdForceProvider(model, params, nn_idx, system.types,
+                                system.box, system.n_atoms, nbr_capacity=48)
+    server = ForceServer(model, params, ServeConfig(
+        atom_buckets=(32, 64), batch_buckets=(1, 2), nbr_capacity=48))
+    try:
+        remote = RemoteForceProvider(server, nn_idx, system.types,
+                                     system.box, system.n_atoms,
+                                     tenant="engine")
+        # force-level parity at the starting configuration
+        res_l = local.compute(ForceRequest(positions=pos, box=system.box))
+        res_r = remote.compute(ForceRequest(positions=pos, box=system.box))
+        scale = max(float(jnp.abs(res_l.forces).max()), 1e-8)
+        np.testing.assert_allclose(np.asarray(res_r.energy),
+                                   np.asarray(res_l.energy), rtol=1e-5,
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray(res_r.forces),
+                                   np.asarray(res_l.forces),
+                                   rtol=1e-5, atol=1e-5 * scale)
+
+        # trajectory parity over a short run (remote is host_side, so the
+        # engine drives its per-step loop; physics must be unchanged)
+        cfg = EngineConfig(cutoff=0.9, neighbor_capacity=96, dt=0.0005,
+                           thermostat_t=200.0)
+        eng_l = MDEngine(system, cfg, special_force=local)
+        eng_r = MDEngine(system, cfg, special_force=remote)
+        assert eng_r._host_special and not eng_l._host_special
+        st_l = eng_l.run(eng_l.init_state(pos, 200.0), 10)
+        st_r = eng_r.run(eng_r.init_state(pos, 200.0), 10)
+        assert bool(jnp.isfinite(st_r.positions).all())
+        np.testing.assert_allclose(np.asarray(st_r.positions),
+                                   np.asarray(st_l.positions),
+                                   rtol=1e-5, atol=1e-5)
+        m = server.metrics.tenant("engine")
+        assert m.completed == m.submitted and m.errors == 0
+    finally:
+        server.stop()
+
+
+def test_jit_transparent_remote_small_graph(model_params):
+    """Traced positions escape via pure_callback: a small jitted driver
+    around remote.compute works (the engine's fused windows instead use the
+    host_side step loop — see serve.client docstring)."""
+    model, params = model_params
+    n = 24
+    req = _random_request(n)
+    server = ForceServer(model, params, ServeConfig(
+        atom_buckets=(32,), batch_buckets=(1, 2), nbr_capacity=48))
+    try:
+        remote = RemoteForceProvider(server, np.arange(n), req.types,
+                                     req.box, n)
+        eager = remote.compute(ForceRequest(positions=req.positions,
+                                            box=req.box))
+
+        @jax.jit
+        def f(p):
+            res = remote.compute(ForceRequest(positions=p, box=req.box))
+            return res.energy, res.forces
+
+        e, frc = jax.device_get(f(jnp.asarray(req.positions)))
+        np.testing.assert_allclose(e, np.asarray(eager.energy), rtol=1e-6)
+        np.testing.assert_allclose(frc, np.asarray(eager.forces), rtol=1e-6)
+    finally:
+        server.stop()
