@@ -172,10 +172,58 @@ def run(smoke: bool = False):
         acc, es = scan_window(state0, seq)
         jax.block_until_ready(acc)
 
+    # -- observability overhead: the same fused window with the tracer's
+    # per-step counter record threaded out of the scan.  ``want=False``
+    # threads an empty dict — the traced program must be identical to the
+    # uninstrumented window (the <2%-overhead acceptance bar); ``want=True``
+    # carries the dd counters and pays one device_get per window.
+    from repro.obs import ObsConfig, Tracer
+    OBS_COUNTERS = ("local_count", "ghost_count", "cost_max", "cost_ratio",
+                    "rank_cost", "nbr_occupancy")
+
+    def make_obs_window(want: bool):
+        @jax.jit
+        def win(st, positions):
+            def body(carry, pos):
+                st, acc = carry
+                e, f, diag = ev(params, pos, st)
+
+                def rebuilt(p, s):
+                    s2 = asm(p, types)
+                    e2, f2, d2 = ev(params, p, s2)
+                    return s2, e2, f2, d2
+
+                st, e, f, diag = jax.lax.cond(
+                    diag["needs_rebuild"], rebuilt,
+                    lambda p, s: (s, e, f, diag), pos, st)
+                rec = {k: diag[k] for k in OBS_COUNTERS} if want else {}
+                return (st, acc + f), (e, rec)
+
+            (st, acc), (es, recs) = jax.lax.scan(
+                body, (st, jnp.zeros_like(coords)), positions)
+            return acc, es, recs
+        return win
+
+    tracer = Tracer(ObsConfig(enabled=True))
+    win_off = make_obs_window(False)
+    win_on = make_obs_window(True)
+
+    def obs_off():
+        acc, es, _ = win_off(state0, seq)
+        jax.block_until_ready(acc)
+
+    def obs_on():
+        acc, es, recs = win_on(state0, seq)
+        jax.block_until_ready(acc)
+        tracer.record_window(0, STEPS, recs)   # the host transfer is part
+        #   of the measured cost: one device_get per window, never per step
+
     iters = 2 if smoke else 3
     t_per_step = time_fn(per_step, warmup=1, iters=iters) / STEPS
     t_reuse = time_fn(reuse, warmup=1, iters=iters) / STEPS
     t_scan = time_fn(scan_fused, warmup=1, iters=iters) / STEPS
+    t_obs_off = time_fn(obs_off, warmup=1, iters=iters) / STEPS
+    t_obs_on = time_fn(obs_on, warmup=1, iters=iters) / STEPS
 
     # -- reuse parity: stale state vs fresh assembly at drifted positions --
     c1 = jnp.asarray(_parity_drift(coords_h, box, cfgS.halo_eff, rng))
@@ -193,6 +241,12 @@ def run(smoke: bool = False):
         "scan_fused_us": t_scan,
         "speedup_reuse": t_per_step / t_reuse,
         "speedup_scan_fused": t_per_step / t_scan,
+        "scan_obs_off_us": t_obs_off,
+        "scan_obs_on_us": t_obs_on,
+        "obs_off_overhead_pct": 100.0 * (t_obs_off - t_scan) / t_scan,
+        "obs_on_overhead_pct": 100.0 * (t_obs_on - t_scan) / t_scan,
+        "obs_steps_recorded": sum(1 for e in tracer.events
+                                  if e["type"] == "step"),
         "reuse_bitwise_equal_fresh": bitwise,
         "reuse_max_abs_df": max_df,
         "max_disp2": float(diag["max_disp2"]),
@@ -204,6 +258,10 @@ def run(smoke: bool = False):
         ("dd_reuse_skin", t_reuse, f"x{payload['speedup_reuse']:.2f}"),
         ("dd_reuse_scan", t_scan,
          f"x{payload['speedup_scan_fused']:.2f} bitwise={bitwise}"),
+        ("dd_reuse_obs_off", t_obs_off,
+         f"{payload['obs_off_overhead_pct']:+.2f}% vs scan (<2% target)"),
+        ("dd_reuse_obs_on", t_obs_on,
+         f"{payload['obs_on_overhead_pct']:+.2f}% with counters+transfer"),
     ]
 
 

@@ -1,9 +1,15 @@
 """Paper Fig. 12: per-step phase breakdown of the distributed DP path.
 
 The paper's ROCm trace shows >90% inference, <=10% force collective, ~0
-coordinate broadcast.  We instrument the same three phases (coordinate
-gather+DD assembly / inference / force reduction) on an 8-rank forced-host
-mesh in a subprocess and report their shares.
+coordinate broadcast.  Earlier versions of this benchmark timed a
+hand-rolled single-rank pipeline with a ``f.sum(0)`` stand-in for the
+force reduction; now the breakdown comes from the observability layer's
+nested prefix probes (:func:`repro.core.make_phase_probe_fns` +
+:func:`repro.obs.timed_prefix_phases`): each probe runs the *real* fused
+``make_distributed_force_fn`` pipeline truncated after one more phase
+(gather ⊂ assembly ⊂ inference ⊂ force-reduction) on the full 8-rank
+forced-host mesh, and successive differences attribute the step time.
+The last probe is the production driver itself — measured, not modeled.
 """
 from __future__ import annotations
 
@@ -15,60 +21,46 @@ import sys
 from .common import save_json
 
 _CODE = r"""
-import os, time, json
+import os, json
 import jax, jax.numpy as jnp, numpy as np
 from repro.dp import DPModel, paper_dpa1_config
-from repro.core import suggest_config
-from repro.core.ddinfer import _subdomain_nbr_list
-from repro.core.domain import uniform_grid
+from repro.core import suggest_config, make_phase_probe_fns
+from repro.launch.mesh import make_dd_mesh
+from repro.obs import ObsConfig, Tracer, timed_prefix_phases
 
 rng = np.random.default_rng(0)
 n = 512
 box = np.array([5.0, 5.0, 5.0], np.float32)
-coords = jnp.asarray(rng.uniform(0, 5, (n, 3)), jnp.float32)
+coords_h = rng.uniform(0, 5, (n, 3)).astype(np.float32)
+coords = jnp.asarray(coords_h)
 types = jnp.asarray(rng.integers(0, 4, n), jnp.int32)
 model = DPModel(paper_dpa1_config(ntypes=4, rcut=0.6, sel=48))
 params = model.init_params(jax.random.PRNGKey(0))
-cfg = suggest_config(n, box, 8, 0.6, nbr_capacity=64, slack=2.5)
-grid = uniform_grid(jnp.asarray(box), cfg.grid_dims)
+mesh = make_dd_mesh(8)
+cfg = suggest_config(n, box, 8, 0.6, nbr_capacity=64, slack=2.5,
+                     nbr_method="cells", coords=coords_h)
 
-# phase 1: selection + buffer assembly + neighbor list (per rank 0)
-from repro.core.domain import select_local, select_ghosts
-def phase_assemble(rank):
-    l_idx, l_mask, _ = select_local(coords, grid, rank, cfg.local_capacity)
-    g_idx, g_shift, g_mask, _ = select_ghosts(coords, jnp.asarray(box), grid,
-                                              rank, cfg.halo, cfg.ghost_capacity)
-    buf = jnp.concatenate([coords[l_idx], coords[g_idx] + g_shift])
-    m = jnp.concatenate([l_mask, g_mask]).astype(jnp.float32)
-    nbr_idx, nbr_mask, _ = _subdomain_nbr_list(buf, m, 0.6, cfg.nbr_capacity)
-    return buf, m, nbr_idx, nbr_mask, l_idx, l_mask
+tracer = Tracer(ObsConfig(enabled=True))
+probes = make_phase_probe_fns(model, cfg, mesh, box, n)
+thunks = {k: (lambda fn=fn: fn(params, coords, types))
+          for k, fn in probes.items()}
+phases = timed_prefix_phases(tracer, thunks, iters=3, warmup=1)
 
-assemble = jax.jit(phase_assemble)
-buf, m, nbr_idx, nbr_mask, l_idx, l_mask = assemble(jnp.asarray(0))
+# per-rank balance of the same fused step, from the driver's own diag
+# (the last probe IS the fused driver — already compiled, reuse it)
+_, _, diag = probes["force_reduce"](params, coords, types)
+rank_cost = np.asarray(diag["rank_cost"], np.float64)
 
-local_mask = jnp.concatenate([l_mask.astype(jnp.float32),
-                              jnp.zeros(cfg.ghost_capacity)])
-infer = jax.jit(lambda b, nm: model.energy_and_forces_dual(
-    params, b, types[jnp.zeros(b.shape[0], jnp.int32)], nbr_idx, nm,
-    m, local_mask))
-
-reduce_f = jax.jit(lambda f: f.sum(0))  # stand-in cost of assembly+reduce
-
-def t(fn, *a):
-    fn(*a); fn(*a)
-    t0 = time.perf_counter()
-    for _ in range(5):
-        jax.block_until_ready(fn(*a))
-    return (time.perf_counter() - t0) / 5
-
-t_asm = t(assemble, jnp.asarray(0))
-t_inf = t(infer, buf, nbr_mask.astype(jnp.float32))
-e, fbuf = infer(buf, nbr_mask.astype(jnp.float32))
-t_red = t(reduce_f, fbuf)
-tot = t_asm + t_inf + t_red
+tot = sum(phases.values())
 print("JSON" + json.dumps({
-    "assemble_s": t_asm, "inference_s": t_inf, "reduce_s": t_red,
-    "inference_share": t_inf / tot}))
+    "gather_s": phases["gather"],
+    "assemble_s": phases["assembly"],
+    "inference_s": phases["inference"],
+    "reduce_s": phases["force_reduce"],
+    "inference_share": phases["inference"] / tot,
+    "rank_cost": rank_cost.tolist(),
+    "cost_ratio": float(rank_cost.max() / max(rank_cost.mean(), 1e-12)),
+}))
 """
 
 
@@ -77,13 +69,16 @@ def run():
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     proc = subprocess.run([sys.executable, "-c", _CODE], env=env,
-                          capture_output=True, text=True, timeout=560)
+                          capture_output=True, text=True, timeout=1500)
     assert proc.returncode == 0, proc.stderr[-2000:]
     out = json.loads([l for l in proc.stdout.splitlines()
                       if l.startswith("JSON")][0][4:])
     save_json("fig12_breakdown", out)
     share = out["inference_share"]
+    ratio = out["cost_ratio"]
     return [("fig12_inference_phase", out["inference_s"] * 1e6,
              f"inference share {share:.2%} (paper: ~90%)"),
-            ("fig12_assemble_phase", out["assemble_s"] * 1e6, "DD assembly"),
-            ("fig12_reduce_phase", out["reduce_s"] * 1e6, "force reduce")]
+            ("fig12_assemble_phase", out["assemble_s"] * 1e6,
+             "coord gather + DD assembly"),
+            ("fig12_reduce_phase", out["reduce_s"] * 1e6,
+             f"force reduce; rank cost_ratio {ratio:.2f}")]

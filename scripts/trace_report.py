@@ -1,0 +1,39 @@
+#!/usr/bin/env python
+"""Render a Fig. 12-style phase breakdown + per-rank imbalance table from a
+recorded observability trace (the ``events.jsonl`` written by
+``repro.obs.Tracer.flush`` / ``ObsConfig.trace_dir``).
+
+Usage:
+  python scripts/trace_report.py experiments/traces/example_8rank_trace.jsonl
+  python scripts/trace_report.py <trace.jsonl> --json report.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.obs import report  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", help="path to an events.jsonl trace")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the structured summary as JSON")
+    args = ap.parse_args(argv)
+
+    events = report.load(args.trace)
+    print(report.render(events))
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(report.summarize(events), fh, indent=2)
+        print(f"\nwrote {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

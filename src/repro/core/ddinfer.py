@@ -538,7 +538,12 @@ def _evaluate_rank(model: DPModel, params, coords_all, ref_all, st: dict,
                                           * l_mask[:, None])
         f_global = f_global.at[g_idx].add(f_buf[cfg.local_capacity:]
                                           * st["g_mask"][:, None])
-    return e_local, f_global, trim_overflow
+    # occupancy of the model-facing (post-compaction) list: fill over the
+    # slots the valid buffer rows actually paid for — the observability
+    # layer's capacity-tuning signal (free: both factors already exist)
+    stats = {"nbr_fill": (nbr_mask > 0).sum().astype(dtype),
+             "nbr_slots": st["buf_mask"].sum() * k_eval}
+    return e_local, f_global, trim_overflow, stats
 
 
 # ---------------------------------------------------------------------------
@@ -603,12 +608,14 @@ def make_assembly_fn(model: DPModel, cfg: DDConfig, mesh: Mesh, box,
     n_pad = cfg.padded_atoms(n_atoms)
 
     def per_rank(coords_shard, types_all):
-        coords_all = jax.lax.all_gather(coords_shard, axis, axis=0,
-                                        tiled=True)  # collective 1
+        with jax.named_scope("obs.gather"):
+            coords_all = jax.lax.all_gather(coords_shard, axis, axis=0,
+                                            tiled=True)  # collective 1
         rank = jax.lax.axis_index(axis)
-        grid = _make_grid(coords_all, box, cfg, n_atoms)
-        st = _assemble_rank(coords_all, types_all, box, grid, cfg, rcut,
-                            rank, n_atoms)
+        with jax.named_scope("obs.assembly"):
+            grid = _make_grid(coords_all, box, cfg, n_atoms)
+            st = _assemble_rank(coords_all, types_all, box, grid, cfg, rcut,
+                                rank, n_atoms)
         st["cost_max"] = jax.lax.pmax(st["local_count"] + st["ghost_count"],
                                       axis)
         st["local_count"] = jax.lax.psum(st["local_count"], axis)
@@ -651,19 +658,23 @@ def make_evaluation_fn(model: DPModel, cfg: DDConfig, mesh: Mesh, box,
     chunk = n_pad // cfg.n_ranks
 
     def per_rank(params, coords_shard, st: DDState):
-        coords_all = jax.lax.all_gather(coords_shard, axis, axis=0,
-                                        tiled=True)  # collective 1
+        with jax.named_scope("obs.gather"):
+            coords_all = jax.lax.all_gather(coords_shard, axis, axis=0,
+                                            tiled=True)  # collective 1
         rank = jax.lax.axis_index(axis)
         st_d = {f.name: getattr(st, f.name)
                 for f in dataclasses.fields(DDState) if f.name != "ref"}
-        e_local, f_global, trim_ovf = _evaluate_rank(
-            model, params, coords_all, st.ref, st_d, box, cfg, rcut)
-        energy = jax.lax.psum(e_local, axis)
-        if cfg.reduce_mode == "reduce_scatter":
-            forces = jax.lax.psum_scatter(f_global, axis, scatter_dimension=0,
-                                          tiled=True)        # collective 2'
-        else:
-            forces = jax.lax.psum(f_global, axis)            # collective 2
+        with jax.named_scope("obs.inference"):
+            e_local, f_global, trim_ovf, stats = _evaluate_rank(
+                model, params, coords_all, st.ref, st_d, box, cfg, rcut)
+        with jax.named_scope("obs.force_reduce"):
+            energy = jax.lax.psum(e_local, axis)
+            if cfg.reduce_mode == "reduce_scatter":
+                forces = jax.lax.psum_scatter(
+                    f_global, axis, scatter_dimension=0,
+                    tiled=True)                              # collective 2'
+            else:
+                forces = jax.lax.psum(f_global, axis)        # collective 2
         # skin check on this rank's shard only; pmax = the "psum'd" rebuild
         # criterion (mirrors md.neighbors.needs_rebuild)
         ref_shard = jax.lax.dynamic_slice_in_dim(st.ref, rank * chunk, chunk)
@@ -672,8 +683,18 @@ def make_evaluation_fn(model: DPModel, cfg: DDConfig, mesh: Mesh, box,
         overflow = st.overflow + jax.lax.psum(trim_ovf.astype(jnp.int32),
                                               axis)
         total = st.local_count + st.ghost_count
+        # per-rank Eq.-8 cost vector, replicated: the masks shard along the
+        # mesh axis, so each rank contributes its own local+ghost count
+        rank_cost = jax.lax.all_gather(
+            st.l_mask.sum().astype(jnp.int32)
+            + st.g_mask.sum().astype(jnp.int32), axis)
+        occupancy = (jax.lax.psum(stats["nbr_fill"], axis)
+                     / jnp.maximum(jax.lax.psum(stats["nbr_slots"], axis),
+                                   1.0))
         diag = {"local_count": st.local_count, "ghost_count": st.ghost_count,
                 "overflow": overflow, "max_disp2": disp2,
+                "cost_max": st.cost_max, "rank_cost": rank_cost,
+                "nbr_occupancy": occupancy,
                 # max/mean per-rank Eq.-8 cost: the load-imbalance figure the
                 # rebalance knob is meant to push toward 1.0
                 "cost_ratio": st.cost_max * cfg.n_ranks
@@ -685,7 +706,8 @@ def make_evaluation_fn(model: DPModel, cfg: DDConfig, mesh: Mesh, box,
     out_force_spec = (P(axis, None) if cfg.reduce_mode == "reduce_scatter"
                       else P(None, None))
     diag_specs = {k: P() for k in ("local_count", "ghost_count", "overflow",
-                                   "max_disp2", "cost_ratio",
+                                   "max_disp2", "cost_max", "rank_cost",
+                                   "nbr_occupancy", "cost_ratio",
                                    "needs_rebuild")}
     mapped = compat.shard_map(
         per_rank, mesh=mesh,
@@ -748,25 +770,37 @@ def make_distributed_force_fn(model: DPModel, cfg: DDConfig, mesh: Mesh,
     n_pad = cfg.padded_atoms(n_atoms)
 
     def per_rank(params, coords_shard, types_all):
-        coords_all = jax.lax.all_gather(coords_shard, axis, axis=0,
-                                        tiled=True)  # collective 1
+        with jax.named_scope("obs.gather"):
+            coords_all = jax.lax.all_gather(coords_shard, axis, axis=0,
+                                            tiled=True)  # collective 1
         rank = jax.lax.axis_index(axis)
-        grid = _make_grid(coords_all, box, cfg, n_atoms)
-        st = _assemble_rank(coords_all, types_all, box, grid, cfg, rcut,
-                            rank, n_atoms)
-        e_local, f_global, trim_ovf = _evaluate_rank(
-            model, params, coords_all, coords_all, st, box, cfg, rcut)
+        with jax.named_scope("obs.assembly"):
+            grid = _make_grid(coords_all, box, cfg, n_atoms)
+            st = _assemble_rank(coords_all, types_all, box, grid, cfg, rcut,
+                                rank, n_atoms)
+        with jax.named_scope("obs.inference"):
+            e_local, f_global, trim_ovf, stats = _evaluate_rank(
+                model, params, coords_all, coords_all, st, box, cfg, rcut)
         st["overflow"] = st["overflow"] | trim_ovf
-        energy = jax.lax.psum(e_local, axis)
-        if cfg.reduce_mode == "reduce_scatter":
-            forces = jax.lax.psum_scatter(f_global, axis, scatter_dimension=0,
-                                          tiled=True)        # collective 2'
-        else:
-            forces = jax.lax.psum(f_global, axis)            # collective 2
+        with jax.named_scope("obs.force_reduce"):
+            energy = jax.lax.psum(e_local, axis)
+            if cfg.reduce_mode == "reduce_scatter":
+                forces = jax.lax.psum_scatter(
+                    f_global, axis, scatter_dimension=0,
+                    tiled=True)                              # collective 2'
+            else:
+                forces = jax.lax.psum(f_global, axis)        # collective 2
+        rank_cost = jax.lax.all_gather(st["local_count"] + st["ghost_count"],
+                                       axis)
         cost_max = jax.lax.pmax(st["local_count"] + st["ghost_count"], axis)
         local_count = jax.lax.psum(st["local_count"], axis)
         ghost_count = jax.lax.psum(st["ghost_count"], axis)
+        occupancy = (jax.lax.psum(stats["nbr_fill"], axis)
+                     / jnp.maximum(jax.lax.psum(stats["nbr_slots"], axis),
+                                   1.0))
         diag = {"local_count": local_count, "ghost_count": ghost_count,
+                "cost_max": cost_max, "rank_cost": rank_cost,
+                "nbr_occupancy": occupancy,
                 "cost_ratio": cost_max * cfg.n_ranks
                               / jnp.maximum(local_count + ghost_count,
                                             1).astype(jnp.float32),
@@ -780,7 +814,8 @@ def make_distributed_force_fn(model: DPModel, cfg: DDConfig, mesh: Mesh,
         per_rank, mesh=mesh,
         in_specs=(P(), P(axis, None), P()),
         out_specs=(P(), out_force_spec,
-                   {"local_count": P(), "ghost_count": P(),
+                   {"local_count": P(), "ghost_count": P(), "cost_max": P(),
+                    "rank_cost": P(), "nbr_occupancy": P(),
                     "cost_ratio": P(), "overflow": P()}))
 
     def fn(params, coords, types):
@@ -789,6 +824,73 @@ def make_distributed_force_fn(model: DPModel, cfg: DDConfig, mesh: Mesh,
         return e, f[:n_atoms], diag
 
     return jax.jit(fn)
+
+
+def make_phase_probe_fns(model: DPModel, cfg: DDConfig, mesh: Mesh, box,
+                         n_atoms: int) -> dict:
+    """Prefix probes attributing the fused driver's cost to its phases.
+
+    Returns an ordered ``{phase: jitted f(params, coords, types)}`` dict
+    where each probe executes :func:`make_distributed_force_fn`'s pipeline
+    *through* that phase and stops (gather ⊂ assembly ⊂ inference ⊂
+    force_reduce); the last entry IS the full fused driver.  Successive
+    wall-time differences (``repro.obs.timed_prefix_phases``) therefore
+    measure — not model — the paper's Fig. 12 shares: coordinate
+    broadcast, DD assembly, DP inference, force collective.  Each partial
+    probe reduces its intermediates to a per-rank scalar with no further
+    collective, so the phases after its cut contribute nothing.
+    """
+    cfg.validate(box)
+    axis = cfg.axis
+    rcut = model.cfg.descriptor.rcut
+    box_j = jnp.asarray(box)
+    n_pad = cfg.padded_atoms(n_atoms)
+
+    def gather_rank(params, coords_shard, types_all):
+        coords_all = jax.lax.all_gather(coords_shard, axis, axis=0,
+                                        tiled=True)
+        return coords_all.sum()
+
+    def assembly_rank(params, coords_shard, types_all):
+        coords_all = jax.lax.all_gather(coords_shard, axis, axis=0,
+                                        tiled=True)
+        rank = jax.lax.axis_index(axis)
+        grid = _make_grid(coords_all, box_j, cfg, n_atoms)
+        st = _assemble_rank(coords_all, types_all, box_j, grid, cfg, rcut,
+                            rank, n_atoms)
+        # depend on every expensive assembly output so nothing is DCE'd
+        return (st["nbr_idx"].sum() + st["nbr_mask"].sum()
+                + st["local_count"].astype(jnp.float32)
+                + st["ghost_count"].astype(jnp.float32))
+
+    def inference_rank(params, coords_shard, types_all):
+        coords_all = jax.lax.all_gather(coords_shard, axis, axis=0,
+                                        tiled=True)
+        rank = jax.lax.axis_index(axis)
+        grid = _make_grid(coords_all, box_j, cfg, n_atoms)
+        st = _assemble_rank(coords_all, types_all, box_j, grid, cfg, rcut,
+                            rank, n_atoms)
+        e, f, _, _ = _evaluate_rank(model, params, coords_all, coords_all,
+                                    st, box_j, cfg, rcut)
+        return e + f.sum()
+
+    def wrap(per_rank):
+        # each rank emits its scalar as a (1,) shard -> (P,) global output
+        mapped = compat.shard_map(
+            lambda *a: jnp.reshape(per_rank(*a), (1,)), mesh=mesh,
+            in_specs=(P(), P(axis, None), P()), out_specs=P(axis))
+
+        def fn(params, coords, types):
+            coords_p, types_p = _pad_atoms(coords, n_pad, box_j, types)
+            return mapped(params, coords_p, types_p)
+
+        return jax.jit(fn)
+
+    full = make_distributed_force_fn(model, cfg, mesh, box, n_atoms)
+    return {"gather": wrap(gather_rank),
+            "assembly": wrap(assembly_rank),
+            "inference": wrap(inference_rank),
+            "force_reduce": full}
 
 
 # ---------------------------------------------------------------------------
@@ -852,14 +954,16 @@ def make_batched_assembly_fn(model: DPModel, cfg: DDConfig, mesh: Mesh, box,
 
     def per_rank(coords_shard, types_all):
         # (r_loc, n_pad/P, 3) -> one batched collective 1 -> (r_loc, n_pad, 3)
-        coords_all = jax.lax.all_gather(coords_shard, axis, axis=1,
-                                        tiled=True)
+        with jax.named_scope("obs.gather"):
+            coords_all = jax.lax.all_gather(coords_shard, axis, axis=1,
+                                            tiled=True)
         rank = jax.lax.axis_index(axis)
 
         def one(coords_one):
-            grid = _make_grid(coords_one, box, cfg, n_atoms)
-            return _assemble_rank(coords_one, types_all, box, grid, cfg,
-                                  rcut, rank, n_atoms)
+            with jax.named_scope("obs.assembly"):
+                grid = _make_grid(coords_one, box, cfg, n_atoms)
+                return _assemble_rank(coords_one, types_all, box, grid, cfg,
+                                      rcut, rank, n_atoms)
 
         st = jax.vmap(one)(coords_all)
         st["cost_max"] = jax.lax.pmax(st["local_count"] + st["ghost_count"],
@@ -914,7 +1018,8 @@ def make_batched_evaluation_fn(model: DPModel, cfg: DDConfig, mesh: Mesh,
             return _evaluate_rank(model, params, coords_one, ref_one,
                                   st_one, box, cfg, rcut)
 
-        e_local, f_global, trim_ovf = jax.vmap(one)(coords_all, st.ref, st_d)
+        e_local, f_global, trim_ovf, stats = jax.vmap(one)(coords_all,
+                                                           st.ref, st_d)
         energy = jax.lax.psum(e_local, axis)
         if cfg.reduce_mode == "reduce_scatter":
             forces = jax.lax.psum_scatter(f_global, axis, scatter_dimension=1,
@@ -929,8 +1034,17 @@ def make_batched_evaluation_fn(model: DPModel, cfg: DDConfig, mesh: Mesh,
         overflow = st.overflow + jax.lax.psum(trim_ovf.astype(jnp.int32),
                                               axis)
         total = st.local_count + st.ghost_count
+        # (r_loc, P) per-replica per-rank cost vectors, gathered on axis 1
+        rank_cost = jax.lax.all_gather(
+            st.l_mask.sum(1).astype(jnp.int32)
+            + st.g_mask.sum(1).astype(jnp.int32), axis, axis=1)
+        occupancy = (jax.lax.psum(stats["nbr_fill"], axis)
+                     / jnp.maximum(jax.lax.psum(stats["nbr_slots"], axis),
+                                   1.0))
         diag = {"local_count": st.local_count, "ghost_count": st.ghost_count,
                 "overflow": overflow, "max_disp2": disp2,
+                "cost_max": st.cost_max, "rank_cost": rank_cost,
+                "nbr_occupancy": occupancy,
                 "cost_ratio": st.cost_max * cfg.n_ranks
                               / jnp.maximum(total, 1).astype(jnp.float32),
                 "needs_rebuild": (disp2 > (0.5 * cfg.skin) ** 2)
@@ -942,7 +1056,9 @@ def make_batched_evaluation_fn(model: DPModel, cfg: DDConfig, mesh: Mesh,
                       else P(replica_axis, None, None))
     diag_specs = {k: P(replica_axis)
                   for k in ("local_count", "ghost_count", "overflow",
-                            "max_disp2", "cost_ratio", "needs_rebuild")}
+                            "max_disp2", "cost_max", "nbr_occupancy",
+                            "cost_ratio", "needs_rebuild")}
+    diag_specs["rank_cost"] = P(replica_axis, None)
     mapped = compat.shard_map(
         per_rank, mesh=mesh,
         in_specs=(P(), P(replica_axis, axis, None),
@@ -1008,30 +1124,42 @@ def make_batched_force_fn(model: DPModel, cfg: DDConfig, mesh: Mesh, box,
     n_pad = cfg.padded_atoms(n_atoms)
 
     def per_rank(params, coords_shard, types_all):
-        coords_all = jax.lax.all_gather(coords_shard, axis, axis=1,
-                                        tiled=True)  # batched collective 1
+        with jax.named_scope("obs.gather"):
+            coords_all = jax.lax.all_gather(coords_shard, axis, axis=1,
+                                            tiled=True)  # batched collective 1
         rank = jax.lax.axis_index(axis)
 
         def one(coords_one):
-            grid = _make_grid(coords_one, box, cfg, n_atoms)
-            st = _assemble_rank(coords_one, types_all, box, grid, cfg, rcut,
-                                rank, n_atoms)
-            e, f, trim_ovf = _evaluate_rank(model, params, coords_one,
-                                            coords_one, st, box, cfg, rcut)
+            with jax.named_scope("obs.assembly"):
+                grid = _make_grid(coords_one, box, cfg, n_atoms)
+                st = _assemble_rank(coords_one, types_all, box, grid, cfg,
+                                    rcut, rank, n_atoms)
+            with jax.named_scope("obs.inference"):
+                e, f, trim_ovf, stats = _evaluate_rank(
+                    model, params, coords_one, coords_one, st, box, cfg, rcut)
             return (e, f, st["overflow"] | trim_ovf, st["local_count"],
-                    st["ghost_count"])
+                    st["ghost_count"], stats)
 
-        e_local, f_global, ovf, l_count, g_count = jax.vmap(one)(coords_all)
-        energy = jax.lax.psum(e_local, axis)
-        if cfg.reduce_mode == "reduce_scatter":
-            forces = jax.lax.psum_scatter(f_global, axis, scatter_dimension=1,
-                                          tiled=True)  # batched collective 2'
-        else:
-            forces = jax.lax.psum(f_global, axis)       # batched collective 2
+        (e_local, f_global, ovf, l_count, g_count,
+         stats) = jax.vmap(one)(coords_all)
+        with jax.named_scope("obs.force_reduce"):
+            energy = jax.lax.psum(e_local, axis)
+            if cfg.reduce_mode == "reduce_scatter":
+                forces = jax.lax.psum_scatter(
+                    f_global, axis, scatter_dimension=1,
+                    tiled=True)                         # batched collective 2'
+            else:
+                forces = jax.lax.psum(f_global, axis)   # batched collective 2
         cost_max = jax.lax.pmax(l_count + g_count, axis)
         local_count = jax.lax.psum(l_count, axis)
         ghost_count = jax.lax.psum(g_count, axis)
+        rank_cost = jax.lax.all_gather(l_count + g_count, axis, axis=1)
+        occupancy = (jax.lax.psum(stats["nbr_fill"], axis)
+                     / jnp.maximum(jax.lax.psum(stats["nbr_slots"], axis),
+                                   1.0))
         diag = {"local_count": local_count, "ghost_count": ghost_count,
+                "cost_max": cost_max, "rank_cost": rank_cost,
+                "nbr_occupancy": occupancy,
                 "cost_ratio": cost_max * cfg.n_ranks
                               / jnp.maximum(local_count + ghost_count,
                                             1).astype(jnp.float32),
@@ -1042,7 +1170,9 @@ def make_batched_force_fn(model: DPModel, cfg: DDConfig, mesh: Mesh, box,
                       if cfg.reduce_mode == "reduce_scatter"
                       else P(replica_axis, None, None))
     diag_specs = {k: P(replica_axis) for k in ("local_count", "ghost_count",
+                                               "cost_max", "nbr_occupancy",
                                                "cost_ratio", "overflow")}
+    diag_specs["rank_cost"] = P(replica_axis, None)
     mapped = compat.shard_map(
         per_rank, mesh=mesh,
         in_specs=(P(), P(replica_axis, axis, None), P()),

@@ -47,6 +47,12 @@ from .ddinfer import (DDConfig, make_assembly_fn, make_displacement_check_fn,
                       single_domain_state)
 
 
+# dd diag entries surfaced as per-step observability counters (see
+# repro.obs.trace): everything the Fig. 12 / imbalance reports consume
+_COUNTER_KEYS = ("local_count", "ghost_count", "cost_max", "cost_ratio",
+                 "rank_cost", "nbr_occupancy", "max_disp2")
+
+
 @dataclasses.dataclass(frozen=True)
 class UnitConversion:
     """GROMACS (nm, kJ/mol) <-> model native units (DeePMD: Angstrom, eV).
@@ -213,7 +219,13 @@ class DeepmdForceProvider:
         if self.dd_config is not None:
             e, f_nn, diag = self._eval_fn(self.params, nn_pos, state)
             flags = {"overflow": diag["overflow"] > 0,
-                     "needs_rebuild": diag["needs_rebuild"]}
+                     "needs_rebuild": diag["needs_rebuild"],
+                     # per-step device counters for the observability layer
+                     # (already computed inside the evaluation — free); the
+                     # engine threads these out of its scan windows when the
+                     # tracer wants them, XLA drops them otherwise
+                     "counters": {k: diag[k] for k in _COUNTER_KEYS
+                                  if k in diag}}
         else:
             e, f_nn, flags = self.backend_evaluate(nn_pos, state)
         e, forces = self._to_engine(e, f_nn, positions)
@@ -288,7 +300,8 @@ class DeepmdForceProvider:
             else:
                 raise RuntimeError("special-force capacity still exceeded "
                                    "after 8 doublings")
-            self.last_diag = {k: bool(jnp.any(v)) for k, v in flags.items()}
+            self.last_diag = {k: bool(jnp.any(v)) for k, v in flags.items()
+                              if k != "counters"}
             return ForceResult(energy=e, forces=forces,
                                diagnostics=dict(self.last_diag),
                                tenant=request.tenant, req_id=request.req_id)

@@ -77,7 +77,8 @@ class EnsembleEngine(MDEngine):
 
     def __init__(self, system: System, config: EngineConfig,
                  ens: EnsembleConfig,
-                 special_force: Optional[ForceProvider] = None):
+                 special_force: Optional[ForceProvider] = None,
+                 obs=None):
         r = ens.n_replicas
         if r < 1:
             raise ValueError("n_replicas must be >= 1")
@@ -99,13 +100,19 @@ class EnsembleEngine(MDEngine):
             jnp.float32)
         self._batch_shape = (r,)
         self._extra_boundary_every = ens.exchange_interval
-        super().__init__(system, config, special_force)
+        super().__init__(system, config, special_force, obs=obs)
         self._exchange_fn = make_exchange_fn(self._temp_table)
-        self.diagnostics.update({
+
+    def _init_diagnostics(self) -> dict:
+        # called from MDEngine.__init__ and reset(); self.ens is set first
+        r = self.ens.n_replicas
+        d = super()._init_diagnostics()
+        d.update({
             "exchange_attempts": 0, "exchange_accepts": 0,
             "pair_attempts": np.zeros(max(r - 1, 0), np.int64),
             "pair_accepts": np.zeros(max(r - 1, 0), np.int64),
         })
+        return d
 
     # -- vmapped construction ----------------------------------------------
 

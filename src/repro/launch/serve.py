@@ -121,14 +121,16 @@ def main_force(args):
     print(f"\n{args.clients} MD clients x {args.steps} steps "
           f"in {dt:.2f}s ({totals['completed'] / max(dt, 1e-9):.1f} req/s)")
     hdr = ("tenant", "submitted", "completed", "timeouts", "errors",
-           "rejected", "max_depth", "mean_lat_ms", "rps")
+           "rejected", "max_depth", "mean_lat_ms", "p50_ms", "p99_ms", "rps")
     print(("{:>10}" * len(hdr)).format(*hdr))
     for tenant in sorted(snap):
         s = snap[tenant]
-        print("{:>10}{:>10}{:>10}{:>10}{:>10}{:>10}{:>10}{:>10.1f}{:>10.2f}"
+        print("{:>10}{:>10}{:>10}{:>10}{:>10}{:>10}{:>10}"
+              "{:>10.1f}{:>10.1f}{:>10.1f}{:>10.2f}"
               .format(tenant, s["submitted"], s["completed"], s["timeouts"],
                       s["errors"], s["rejected"], s["max_queue_depth"],
-                      1e3 * s["mean_latency_s"], s["rps"]))
+                      1e3 * s["mean_latency_s"], 1e3 * s["p50_latency_s"],
+                      1e3 * s["p99_latency_s"], s["rps"]))
     print("totals:", totals)
 
 

@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 
 from ..backend import ForceRequest
+from ..obs import Tracer
 from . import observables
 from .forcefield import ForceFieldConfig, classical_energy
 from .integrators import MDState, init_velocities, leapfrog_step, berendsen_rescale
@@ -95,10 +96,15 @@ class MDEngine:
     _extra_boundary_every: int = 0  # extra host boundary (replica exchange)
 
     def __init__(self, system: System, config: EngineConfig,
-                 special_force: Optional[ForceProvider] = None):
+                 special_force: Optional[ForceProvider] = None,
+                 obs=None):
         self.system = system
         self.config = config
         self.special_force = special_force
+        # obs is a Tracer, an ObsConfig, or None (disabled).  The tracer's
+        # wants_counters flag is baked into the jitted windows at trace
+        # time, so decide observability at construction, not mid-run.
+        self.tracer = Tracer.ensure(obs)
         self._stateful = bool(getattr(special_force, "stateful", False))
         # host_side backends (ForceBackend capability flag, e.g. the serving
         # client) block on host round-trips and must not be fused into
@@ -107,15 +113,30 @@ class MDEngine:
         self._cell_cap_scale = 1.0
         self._build_fns()
         self._window_cache: dict[int, Callable] = {}
-        self.timings: dict[str, float] = {"classical": 0.0, "special": 0.0,
-                                          "integrate": 0.0, "neighbor": 0.0,
-                                          "scan": 0.0}
-        self.diagnostics: dict = {"capacity_growths": [],
-                                  "special_growths": 0,
-                                  "displacement_rebuilds": 0,
-                                  "special_rebuilds": 0,
-                                  "cadence_rebuilds": 0,
-                                  "window_reruns": 0}
+        self.timings: dict[str, float] = self._init_timings()
+        self.diagnostics: dict = self._init_diagnostics()
+
+    def _init_timings(self) -> dict:
+        return {"classical": 0.0, "special": 0.0, "integrate": 0.0,
+                "neighbor": 0.0, "scan": 0.0}
+
+    def _init_diagnostics(self) -> dict:
+        return {"capacity_growths": [],
+                "special_growths": 0,
+                "displacement_rebuilds": 0,
+                "special_rebuilds": 0,
+                "cadence_rebuilds": 0,
+                "window_reruns": 0}
+
+    def reset(self) -> None:
+        """Zero ``timings`` and ``diagnostics`` and clear the tracer's event
+        buffer.  ``run`` already resets ``timings`` on entry (they are
+        per-run); ``diagnostics`` are cumulative across runs — capacity
+        growths outlive the run that triggered them — so a full reset is
+        explicit, via this method."""
+        self.timings = self._init_timings()
+        self.diagnostics = self._init_diagnostics()
+        self.tracer.reset()
 
     # -- construction ------------------------------------------------------
 
@@ -158,7 +179,10 @@ class MDEngine:
     def _step_parts(self, state: MDState, nlist: NeighborList, sp_state):
         """One step from already-valid lists: the shared scan/step core.
 
-        Returns (new_state, nlist_out, sp_state_out, e_cl, e_sp, sp_ovf).
+        Returns (new_state, nlist_out, sp_state_out, e_cl, e_sp, rb, sp_rb,
+        sp_ovf, rec) — ``rec`` is the per-step counter record for the
+        observability tracer (empty unless ``tracer.wants_counters``; XLA
+        dead-code-eliminates the counters whenever it stays empty).
         Traceable: rebuilds inside are data-dependent ``lax.cond`` branches.
         """
         cfg = self.config
@@ -172,6 +196,7 @@ class MDEngine:
         e_sp = jnp.zeros(self._batch_shape, f.dtype)
         sp_rb = jnp.zeros(self._batch_shape, bool)
         sp_ovf = jnp.zeros(self._batch_shape, bool)
+        sp_counters: dict = {}
         if special is not None:
             if self._stateful:
                 # evaluate first: the displacement check comes out of the
@@ -184,19 +209,27 @@ class MDEngine:
                 def rebuilt(p, s):
                     s2 = special.assemble(p)
                     e2, f2, fl2 = special.evaluate(p, s2)
-                    return s2, e2, f2, fl2["overflow"]
+                    return s2, e2, f2, fl2
 
                 def kept(p, s):
-                    return s, e_sp, f_sp, fl["overflow"]
+                    return s, e_sp, f_sp, fl
 
-                sp_state, e_sp, f_sp, sp_ovf = jax.lax.cond(
+                sp_state, e_sp, f_sp, fl_out = jax.lax.cond(
                     jnp.any(sp_rb), rebuilt, kept, state.positions, sp_state)
+                sp_ovf = fl_out["overflow"]
+                sp_counters = fl_out.get("counters", {})
             else:
                 e_sp, f_sp = self._eval_special_stateless(state.positions,
                                                           system.box)
             f = f + f_sp
         new = self._integrate_fn(state, f)
-        return new, nlist, sp_state, e_cl, e_sp, rb, sp_rb, sp_ovf
+        rec = {}
+        if self.tracer.wants_counters:
+            rec = {"e_classical": e_cl, "e_special": e_sp,
+                   "rebuild": rb, "sp_rebuild": sp_rb,
+                   "nlist_overflow": nlist.overflow, "sp_overflow": sp_ovf,
+                   **sp_counters}
+        return new, nlist, sp_state, e_cl, e_sp, rb, sp_rb, sp_ovf, rec
 
     def _check_rebuild(self, nlist: NeighborList, positions) -> jax.Array:
         """Displacement-triggered rebuild flag(s), shaped ``_batch_shape``."""
@@ -211,14 +244,16 @@ class MDEngine:
         def body(carry, _):
             state, nlist, sp_state, flags, _, _ = carry
             (state, nlist, sp_state, e_cl, e_sp, rb, sp_rb,
-             sp_ovf) = self._step_parts(state, nlist, sp_state)
+             sp_ovf, rec) = self._step_parts(state, nlist, sp_state)
             flags = {
                 "rebuilds": flags["rebuilds"] + rb.astype(jnp.int32),
                 "sp_rebuilds": flags["sp_rebuilds"] + sp_rb.astype(jnp.int32),
                 "nlist_overflow": flags["nlist_overflow"] | nlist.overflow,
                 "sp_overflow": flags["sp_overflow"] | sp_ovf,
             }
-            return (state, nlist, sp_state, flags, e_cl, e_sp), None
+            # the scan stacks rec along the step axis for free; with the
+            # tracer off rec is {} and nothing is carried
+            return (state, nlist, sp_state, flags, e_cl, e_sp), rec
 
         def run_window(state, nlist, sp_state):
             bs = self._batch_shape
@@ -228,8 +263,8 @@ class MDEngine:
                      "sp_overflow": jnp.zeros(bs, bool)}
             zero = jnp.zeros(bs)
             carry = (state, nlist, sp_state, flags, zero, zero)
-            carry, _ = jax.lax.scan(body, carry, None, length=k)
-            return carry
+            carry, recs = jax.lax.scan(body, carry, None, length=k)
+            return carry, recs
 
         fn = jax.jit(run_window)
         self._window_cache[k] = fn
@@ -313,12 +348,15 @@ class MDEngine:
 
     def _run_segment_scan(self, state, nlist, sp_state, k: int):
         """One fused window, re-run from its start on capacity overflow."""
+        tracer = self.tracer
         start = (state, nlist, sp_state)
+        step0 = self._abs_step(state) if tracer.wants_counters else 0
         while True:
             t0 = time.perf_counter()
-            (state, nlist, sp_state, flags, e_cl,
-             e_sp) = self._window_fn(k)(*start)
-            jax.block_until_ready(state.positions)
+            with tracer.span("scan_window", phase="scan", steps=k):
+                (state, nlist, sp_state, flags, e_cl,
+                 e_sp), recs = self._window_fn(k)(*start)
+                jax.block_until_ready(state.positions)
             self.timings["scan"] += time.perf_counter() - t0
             nlist_ovf = bool(jnp.any(flags["nlist_overflow"]))
             sp_ovf = bool(jnp.any(flags["sp_overflow"]))
@@ -328,6 +366,7 @@ class MDEngine:
                     jnp.sum(flags["rebuilds"]))
                 self.diagnostics["special_rebuilds"] += int(
                     jnp.sum(flags["sp_rebuilds"]))
+                tracer.record_window(step0, k, recs)
                 return state, nlist, sp_state, e_cl, e_sp
             # grow whichever capacity overflowed, restore the window's start
             # state, and replay the window — correctness over throughput on
@@ -349,69 +388,135 @@ class MDEngine:
         cfg = self.config
         system = self.system
         special = self.special_force
+        tracer = self.tracer
+        want = tracer.wants_counters
+        step0 = self._abs_step(state) if want else 0
         e_cl = e_sp = jnp.zeros(self._batch_shape)
-        for _ in range(k):
+        for j in range(k):
+            rec = {"rebuild": 0, "sp_rebuild": 0} if want else {}
             t0 = time.perf_counter()
-            if bool(jnp.any(self._check_rebuild(nlist, state.positions))):
-                nlist = self._build_nlist_grown(state.positions)
-                self.diagnostics["displacement_rebuilds"] += 1
-            jax.block_until_ready(nlist.idx)
+            with tracer.span("neighbor", phase="neighbor"):
+                if bool(jnp.any(self._check_rebuild(nlist, state.positions))):
+                    nlist = self._build_nlist_grown(state.positions)
+                    self.diagnostics["displacement_rebuilds"] += 1
+                    if want:
+                        rec["rebuild"] = 1
+                jax.block_until_ready(nlist.idx)
             self.timings["neighbor"] += time.perf_counter() - t0
 
             t0 = time.perf_counter()
-            e_cl, f = self._classical_fn(state.positions, nlist)
-            jax.block_until_ready(f)
+            with tracer.span("classical", phase="classical"):
+                e_cl, f = self._classical_fn(state.positions, nlist)
+                jax.block_until_ready(f)
             self.timings["classical"] += time.perf_counter() - t0
 
             if special is not None:
                 t0 = time.perf_counter()
-                if self._stateful:
-                    e_sp, f_sp, fl = special.evaluate(state.positions,
-                                                      sp_state)
-                    if bool(jnp.any(fl["needs_rebuild"])):
-                        sp_state = self._assemble_special_grown(
-                            state.positions)
-                        self.diagnostics["special_rebuilds"] += 1
+                with tracer.span("special", phase="inference"):
+                    if self._stateful:
                         e_sp, f_sp, fl = special.evaluate(state.positions,
                                                           sp_state)
-                    while bool(jnp.any(fl["overflow"])):
-                        # evaluation-side overflow (e.g. k_eval trim): grow
-                        # and recompute — mirrors the scan path's replay
-                        special.grow()
-                        self.diagnostics["special_growths"] += 1
-                        self._window_cache.clear()
-                        if self.diagnostics["special_growths"] > (
-                                cfg.max_capacity_growths):
-                            raise RuntimeError(
-                                "special-force capacity still exceeded "
-                                f"after {cfg.max_capacity_growths} doublings")
-                        sp_state = self._assemble_special_grown(
-                            state.positions)
-                        e_sp, f_sp, fl = special.evaluate(state.positions,
-                                                          sp_state)
-                else:
-                    e_sp, f_sp = self._eval_special_stateless(
-                        state.positions, system.box)
-                f = f + f_sp
-                jax.block_until_ready(f)
+                        if bool(jnp.any(fl["needs_rebuild"])):
+                            sp_state = self._assemble_special_grown(
+                                state.positions)
+                            self.diagnostics["special_rebuilds"] += 1
+                            if want:
+                                rec["sp_rebuild"] = 1
+                            e_sp, f_sp, fl = special.evaluate(state.positions,
+                                                              sp_state)
+                        while bool(jnp.any(fl["overflow"])):
+                            # evaluation-side overflow (e.g. k_eval trim):
+                            # grow and recompute — mirrors the scan replay
+                            special.grow()
+                            self.diagnostics["special_growths"] += 1
+                            self._window_cache.clear()
+                            if self.diagnostics["special_growths"] > (
+                                    cfg.max_capacity_growths):
+                                raise RuntimeError(
+                                    "special-force capacity still exceeded "
+                                    f"after {cfg.max_capacity_growths} "
+                                    "doublings")
+                            sp_state = self._assemble_special_grown(
+                                state.positions)
+                            e_sp, f_sp, fl = special.evaluate(state.positions,
+                                                              sp_state)
+                        if want:
+                            rec.update(fl.get("counters", {}))
+                    else:
+                        e_sp, f_sp = self._eval_special_stateless(
+                            state.positions, system.box)
+                    f = f + f_sp
+                    jax.block_until_ready(f)
                 self.timings["special"] += time.perf_counter() - t0
 
             t0 = time.perf_counter()
-            state = self._integrate_fn(state, f)
-            jax.block_until_ready(state.positions)
+            with tracer.span("integrate", phase="integrate"):
+                state = self._integrate_fn(state, f)
+                jax.block_until_ready(state.positions)
             self.timings["integrate"] += time.perf_counter() - t0
+            if want:
+                tracer.record_step(step0 + j, rec)
         return state, nlist, sp_state, e_cl, e_sp
+
+    def _calibrate_phases(self, state, nlist, sp_state) -> None:
+        """In-scan phase attribution for scan-mode runs (Fig. 9 fractions).
+
+        The fused window reports one ``scan`` wall-clock bucket; this times
+        each already-jitted stage once, warm, and records the durations as
+        ``calibrated`` spans (phases ``scan.neighbor`` / ``scan.classical``
+        / ``scan.inference`` / ``scan.integrate``) so ``trace_report``'s
+        stage-fraction table can decompose the bucket.  Measured on the
+        real jitted stage functions at the run's own state — not modeled."""
+        tracer = self.tracer
+        if not (tracer.enabled and tracer.config.calibrate):
+            return
+        probes: dict[str, Callable] = {
+            "scan.neighbor": lambda: self._check_rebuild(
+                nlist, state.positions),
+            "scan.classical": lambda: self._classical_fn(
+                state.positions, nlist),
+        }
+        special = self.special_force
+        if special is not None:
+            if self._stateful:
+                probes["scan.inference"] = lambda: special.evaluate(
+                    state.positions, sp_state)
+            else:
+                probes["scan.inference"] = lambda: (
+                    self._eval_special_stateless(state.positions,
+                                                 self.system.box))
+        probes["scan.integrate"] = lambda: self._integrate_fn(state,
+                                                              state.forces)
+        for name, thunk in probes.items():
+            jax.block_until_ready(thunk())       # warm (compile) pass
+            t0 = time.perf_counter()
+            jax.block_until_ready(thunk())
+            tracer.add_span(name, time.perf_counter() - t0, phase=name,
+                            calibrated=True)
 
     def run(self, state: MDState, n_steps: int,
             observe: Optional[Callable[[MDState, dict], None]] = None,
             observe_every: int = 10) -> MDState:
         cfg = self.config
+        tracer = self.tracer
+        # timings are per-run: repeated run() calls on one engine no longer
+        # silently accumulate (diagnostics stay cumulative — see reset())
+        self.timings = self._init_timings()
+        scan_mode = cfg.loop_mode != "step" and not self._host_special
+        tracer.meta(kind="run", engine=type(self).__name__,
+                    loop_mode="scan" if scan_mode else "step",
+                    n_steps=int(n_steps),
+                    n_atoms=int(self.system.masses.shape[0]))
+        tracer.start_capture()
         t0 = time.perf_counter()
-        nlist = self._build_nlist_grown(state.positions)
-        sp_state = None
-        if self._stateful:
-            sp_state = self._assemble_special_grown(state.positions)
+        with tracer.span("build", phase="neighbor"):
+            nlist = self._build_nlist_grown(state.positions)
+            sp_state = None
+            if self._stateful:
+                sp_state = self._assemble_special_grown(state.positions)
         self.timings["neighbor"] += time.perf_counter() - t0
+        if scan_mode:
+            self._calibrate_phases(state, nlist, sp_state)
 
         i = 0
         while i < n_steps:
@@ -419,9 +524,11 @@ class MDEngine:
                 # cadence rebuild on the host (the redundant step-0 rebuild
                 # right after the pre-loop build is skipped)
                 t0 = time.perf_counter()
-                nlist = self._build_nlist_grown(state.positions)
-                if self._stateful:
-                    sp_state = self._assemble_special_grown(state.positions)
+                with tracer.span("cadence_rebuild", phase="neighbor"):
+                    nlist = self._build_nlist_grown(state.positions)
+                    if self._stateful:
+                        sp_state = self._assemble_special_grown(
+                            state.positions)
                 self.diagnostics["cadence_rebuilds"] += 1
                 self.timings["neighbor"] += time.perf_counter() - t0
 
@@ -442,6 +549,8 @@ class MDEngine:
             if (cfg.checkpoint_every and cfg.checkpoint_path
                     and self._abs_step(state) % cfg.checkpoint_every == 0):
                 self.checkpoint(state, cfg.checkpoint_path)
+        tracer.stop_capture()
+        tracer.flush()  # no-op unless ObsConfig.trace_dir is set
         return state
 
     # -- batched-engine hooks (overridden by repro.ensemble) ---------------

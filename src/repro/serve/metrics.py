@@ -1,21 +1,33 @@
-"""Per-tenant serving metrics: queue depth, latency, requests per second.
+"""Per-tenant serving metrics: queue depth, latency quantiles, rps.
 
 Host-side bookkeeping only (never traced): the server worker updates these
 under a lock as requests move through submit -> batch -> complete.  A tenant
 is any client stream sharing one accounting id; the registry keeps one
 :class:`TenantMetrics` per id plus an aggregate view.
+
+Latency accounting rides on the shared observability layer
+(:class:`repro.obs.Histogram`): each tenant owns a streaming log-binned
+histogram registered in the process-wide :class:`repro.obs.Registry` under
+``serve.latency_s.<tenant>``, so snapshots report p50/p90/p99 — the numbers
+that matter for a heavy-tailed serving distribution — not just the mean.
+The registry also publishes a ``serve.queue_depth`` gauge (total queued
+requests across tenants, with its running peak) for external scrapers.
 """
 from __future__ import annotations
 
 import collections
 import threading
 import time
+from typing import Optional
+
+from ..obs import Histogram, Registry, get_registry
 
 
 class TenantMetrics:
     """Counters + latency/rate stats for one tenant."""
 
-    def __init__(self, window_s: float = 5.0):
+    def __init__(self, window_s: float = 5.0,
+                 latency: Optional[Histogram] = None):
         self.window_s = window_s
         self.submitted = 0
         self.completed = 0
@@ -24,8 +36,9 @@ class TenantMetrics:
         self.rejected = 0          # backpressure: queue-full rejections
         self.queue_depth = 0       # currently queued (submitted, not done)
         self.max_queue_depth = 0
-        self.total_latency_s = 0.0
-        self.max_latency_s = 0.0
+        # streaming latency distribution (shared with the obs registry when
+        # provided); exact count/sum/max ride along, so mean/max stay exact
+        self.latency = latency if latency is not None else Histogram(lo=1e-6)
         self._done_times = collections.deque()   # completion stamps (rps)
 
     # -- transitions (caller holds the registry lock) -----------------------
@@ -40,8 +53,7 @@ class TenantMetrics:
 
     def _settle(self, latency_s: float) -> None:
         self.queue_depth = max(0, self.queue_depth - 1)
-        self.total_latency_s += latency_s
-        self.max_latency_s = max(self.max_latency_s, latency_s)
+        self.latency.observe(latency_s)
 
     def on_complete(self, latency_s: float) -> None:
         self.completed += 1
@@ -69,17 +81,20 @@ class TenantMetrics:
         return done / self.window_s
 
     def mean_latency_s(self) -> float:
-        settled = self.completed + self.timeouts + self.errors
-        return self.total_latency_s / settled if settled else 0.0
+        return self.latency.mean()
 
     def snapshot(self) -> dict:
+        lat = self.latency
         return {
             "submitted": self.submitted, "completed": self.completed,
             "timeouts": self.timeouts, "errors": self.errors,
             "rejected": self.rejected, "queue_depth": self.queue_depth,
             "max_queue_depth": self.max_queue_depth,
-            "mean_latency_s": self.mean_latency_s(),
-            "max_latency_s": self.max_latency_s,
+            "mean_latency_s": lat.mean(),
+            "max_latency_s": lat.max if lat.count else 0.0,
+            "p50_latency_s": lat.quantile(0.50),
+            "p90_latency_s": lat.quantile(0.90),
+            "p99_latency_s": lat.quantile(0.99),
             "rps": self.rps(),
         }
 
@@ -87,22 +102,31 @@ class TenantMetrics:
 class MetricsRegistry:
     """Thread-safe per-tenant metrics table."""
 
-    def __init__(self, window_s: float = 5.0):
+    def __init__(self, window_s: float = 5.0,
+                 obs_registry: Optional[Registry] = None):
         self.window_s = window_s
+        self.obs = obs_registry if obs_registry is not None else get_registry()
+        self._depth_gauge = self.obs.gauge("serve.queue_depth")
         self._lock = threading.Lock()
         self._tenants: dict[str, TenantMetrics] = {}
+
+    def _new_tenant(self, tenant: str) -> TenantMetrics:
+        hist = self.obs.histogram(f"serve.latency_s.{tenant}", lo=1e-6)
+        return TenantMetrics(self.window_s, latency=hist)
 
     def tenant(self, tenant: str) -> TenantMetrics:
         with self._lock:
             if tenant not in self._tenants:
-                self._tenants[tenant] = TenantMetrics(self.window_s)
+                self._tenants[tenant] = self._new_tenant(tenant)
             return self._tenants[tenant]
 
     def update(self, tenant: str, event: str, *args) -> None:
         with self._lock:
-            tm = self._tenants.setdefault(tenant,
-                                          TenantMetrics(self.window_s))
-            getattr(tm, "on_" + event)(*args)
+            if tenant not in self._tenants:
+                self._tenants[tenant] = self._new_tenant(tenant)
+            getattr(self._tenants[tenant], "on_" + event)(*args)
+            self._depth_gauge.set(sum(m.queue_depth
+                                      for m in self._tenants.values()))
 
     def snapshot(self) -> dict[str, dict]:
         with self._lock:

@@ -38,6 +38,7 @@ import numpy as np
 from ..backend import ForceRequest, ForceResult
 from ..core.ddinfer import make_padded_batch_fn
 from ..dp.model import DPModel
+from ..obs import Tracer
 from .batching import BucketingConfig, choose_bucket, pad_group
 from .metrics import MetricsRegistry
 
@@ -118,12 +119,16 @@ class ForceServer:
     """
 
     def __init__(self, model: DPModel, params, config: ServeConfig = None,
-                 executor_factory=None):
+                 executor_factory=None, obs=None):
         self.model = model
         self.params = params
         self.config = config or ServeConfig()
         self.config.bucketing  # validate bucket lists early
-        self.metrics = MetricsRegistry(self.config.metrics_window_s)
+        # obs: Tracer | ObsConfig | None — spans around bucket dispatches
+        # plus jax.profiler capture via start_capture/stop_capture
+        self.tracer = Tracer.ensure(obs)
+        self.metrics = MetricsRegistry(self.config.metrics_window_s,
+                                       obs_registry=self.tracer.registry)
         self._queue: queue.Queue = queue.Queue(self.config.queue_bound)
         self._executor_factory = executor_factory
         self._fns: dict = {}          # (atom, batch) bucket -> executor
@@ -198,8 +203,17 @@ class ForceServer:
                     np.zeros((b, nb), np.float32),
                     np.ones((b, 3), np.float32)))
 
+    def start_capture(self, trace_dir: Optional[str] = None) -> bool:
+        """Start an XLA profile capture of the serving dispatches (see
+        :meth:`repro.obs.Tracer.start_capture`)."""
+        return self.tracer.start_capture(trace_dir)
+
+    def stop_capture(self) -> bool:
+        return self.tracer.stop_capture()
+
     def stop(self, drain_timeout_s: float = 5.0) -> None:
         """Stop the worker; queued-but-unserved requests error out."""
+        self.tracer.stop_capture()
         self._stop.set()
         self._worker.join(drain_timeout_s)
         while True:
@@ -297,9 +311,13 @@ class ForceServer:
         """Pad one same-bucket group to a compiled shape and evaluate."""
         coords, types, mask, box = pad_group(
             requests, n_bucket, self.config.batch_buckets)
-        e, f, ovf = self._bucket_fn(n_bucket, coords.shape[0])(
-            self.params, coords, types, mask, box)
-        e, f, ovf = jax.device_get((e, f, ovf))
+        with self.tracer.span("serve.bucket", phase="serve",
+                              n_bucket=n_bucket,
+                              batch_bucket=int(coords.shape[0]),
+                              batch_size=len(requests)):
+            e, f, ovf = self._bucket_fn(n_bucket, coords.shape[0])(
+                self.params, coords, types, mask, box)
+            e, f, ovf = jax.device_get((e, f, ovf))
         out = []
         for i, req in enumerate(requests):
             n = req.n_atoms
