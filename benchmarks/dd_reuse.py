@@ -85,8 +85,7 @@ def _parity_drift(coords: np.ndarray, box: np.ndarray, halo_eff: float,
 def run(smoke: bool = False):
     import jax
     import jax.numpy as jnp
-    from repro.core import (make_assembly_fn, make_distributed_force_fn,
-                            make_evaluation_fn, suggest_config)
+    from repro.core import ForcePipeline, suggest_config
     from repro.dp.descriptors import DescriptorConfig
     from repro.dp.model import DPConfig, DPModel
     from repro.launch.mesh import make_dd_mesh
@@ -118,9 +117,10 @@ def run(smoke: bool = False):
     cfgS = suggest_config(n, box, N_RANKS, RCUT, nbr_capacity=48, slack=2.0,
                           nbr_method="cells", coords=coords_h, skin=SKIN)
 
-    fused = make_distributed_force_fn(model, cfg0, mesh, box, n)
-    asm = make_assembly_fn(model, cfgS, mesh, box, n)
-    ev = make_evaluation_fn(model, cfgS, mesh, box, n)
+    fused = ForcePipeline(model, cfg0, mesh, box, n).build_force_fn()
+    pipeS = ForcePipeline(model, cfgS, mesh, box, n)
+    asm = pipeS.build_assembly_fn()
+    ev = pipeS.build_evaluation_fn()
 
     seq_h = _drift_sequence(coords_h, box, rng, STEPS)
     seq = jnp.asarray(seq_h)

@@ -40,8 +40,7 @@ R_VALUES = (2, 4, 8)
 def run(smoke: bool = False):
     import jax
     import jax.numpy as jnp
-    from repro.core import (make_batched_force_fn, make_distributed_force_fn,
-                            suggest_config)
+    from repro.core import ForcePipeline, suggest_config
     from repro.dp.descriptors import DescriptorConfig
     from repro.dp.model import DPConfig, DPModel
     from repro.ensemble import make_ensemble_mesh
@@ -73,8 +72,8 @@ def run(smoke: bool = False):
                               nbr_method="cells", coords=coords_h[0])
 
     cfg8 = cfg_for(N_DEV)
-    fused8 = make_distributed_force_fn(model, cfg8, make_dd_mesh(N_DEV),
-                                       box, n)
+    fused8 = ForcePipeline(model, cfg8, make_dd_mesh(N_DEV), box,
+                           n).build_force_fn()
     iters = 2 if smoke else 3
     rows, points = [], []
     for r in r_values:
@@ -86,17 +85,16 @@ def run(smoke: bool = False):
                 _, f, _ = fused8(params, coords[k], types)
             jax.block_until_ready(f)
 
-        bf_vmap = make_batched_force_fn(model, cfg8,
-                                        make_ensemble_mesh(1, N_DEV),
-                                        box, n, r)
+        bf_vmap = ForcePipeline(model, cfg8, make_ensemble_mesh(1, N_DEV),
+                                box, n, n_replicas=r).build_force_fn()
 
         def batched_vmap(coords=coords, bf=bf_vmap):
             jax.block_until_ready(bf(params, coords, types)[1])
 
         dd_per = N_DEV // r
-        bf_mesh = make_batched_force_fn(model, cfg_for(dd_per),
-                                        make_ensemble_mesh(r, dd_per),
-                                        box, n, r)
+        bf_mesh = ForcePipeline(model, cfg_for(dd_per),
+                                make_ensemble_mesh(r, dd_per),
+                                box, n, n_replicas=r).build_force_fn()
 
         def batched_mesh(coords=coords, bf=bf_mesh):
             jax.block_until_ready(bf(params, coords, types)[1])

@@ -4,9 +4,9 @@ The paper's ROCm trace shows >90% inference, <=10% force collective, ~0
 coordinate broadcast.  Earlier versions of this benchmark timed a
 hand-rolled single-rank pipeline with a ``f.sum(0)`` stand-in for the
 force reduction; now the breakdown comes from the observability layer's
-nested prefix probes (:func:`repro.core.make_phase_probe_fns` +
+nested prefix probes (``ForcePipeline.build_phase_probes`` +
 :func:`repro.obs.timed_prefix_phases`): each probe runs the *real* fused
-``make_distributed_force_fn`` pipeline truncated after one more phase
+the fused force pipeline truncated after one more phase
 (gather ⊂ assembly ⊂ inference ⊂ force-reduction) on the full 8-rank
 forced-host mesh, and successive differences attribute the step time.
 The last probe is the production driver itself — measured, not modeled.
@@ -24,7 +24,7 @@ _CODE = r"""
 import os, json
 import jax, jax.numpy as jnp, numpy as np
 from repro.dp import DPModel, paper_dpa1_config
-from repro.core import suggest_config, make_phase_probe_fns
+from repro.core import ForcePipeline, suggest_config
 from repro.launch.mesh import make_dd_mesh
 from repro.obs import ObsConfig, Tracer, timed_prefix_phases
 
@@ -41,7 +41,7 @@ cfg = suggest_config(n, box, 8, 0.6, nbr_capacity=64, slack=2.5,
                      nbr_method="cells", coords=coords_h)
 
 tracer = Tracer(ObsConfig(enabled=True))
-probes = make_phase_probe_fns(model, cfg, mesh, box, n)
+probes = ForcePipeline(model, cfg, mesh, box, n).build_phase_probes()
 thunks = {k: (lambda fn=fn: fn(params, coords, types))
           for k, fn in probes.items()}
 phases = timed_prefix_phases(tracer, thunks, iters=3, warmup=1)

@@ -11,13 +11,14 @@ import traceback
 
 
 def main() -> None:
-    from . import (dd_reuse, dd_scaling, dp_inference, ensemble_throughput,
-                   fig7_training, fig8_validation, fig9_overhead,
-                   fig10_strong_scaling, fig11_weak_scaling, fig12_breakdown,
-                   roofline_bench, serve_throughput)
+    from . import (comms_overlap, dd_reuse, dd_scaling, dp_inference,
+                   ensemble_throughput, fig7_training, fig8_validation,
+                   fig9_overhead, fig10_strong_scaling, fig11_weak_scaling,
+                   fig12_breakdown, roofline_bench, serve_throughput)
     modules = [
         ("dd_scaling", dd_scaling),
         ("dd_reuse", dd_reuse),
+        ("comms_overlap", comms_overlap),
         ("dp_inference", dp_inference),
         ("ensemble_throughput", ensemble_throughput),
         ("serve_throughput", serve_throughput),

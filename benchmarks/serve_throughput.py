@@ -10,13 +10,13 @@ devices, same harness as ``ensemble_throughput``) and measures what
 continuous batching buys over the pre-serving baseline:
 
   looped    every client dispatches its own requests one at a time through
-            the unbatched dd-8 driver (``make_distributed_force_fn``) —
+            the unbatched dd-8 pipeline (``ForcePipeline.build_force_fn``) —
             what N simulations get without a batching queue: each request
             occupies the whole device set, clients time-slice it (their
             dispatches MUST serialize — see the rendezvous note below)
   batched   N concurrent client threads submitting to the ForceServer,
             whose pluggable executor routes a coalesced batch of B
-            requests through ONE ``make_batched_force_fn`` dispatch on a
+            requests through ONE replica-batched pipeline dispatch on a
             (replica=B, dd=8/B) mesh: the batch partitions the device set,
             each request runs on fewer dd ranks (less Eq.-8 ghost work)
             and the whole group pays one rendezvous instead of B
@@ -49,13 +49,13 @@ def run(smoke: bool = False):
     import jax
     import jax.numpy as jnp
     from repro.backend import ForceRequest
-    from repro.core import (make_batched_force_fn, make_distributed_force_fn,
-                            suggest_config)
+    from repro.core import ForcePipeline, suggest_config
     from repro.dp.descriptors import DescriptorConfig
     from repro.dp.model import DPConfig, DPModel
     from repro.ensemble import make_ensemble_mesh
     from repro.launch.mesh import make_dd_mesh
-    from repro.serve import ForceServer, ServeConfig
+    from repro.serve import (ForceServer, ServeConfig,
+                             pipeline_executor_factory)
 
     if len(jax.devices()) < N_DEV:
         # jax is already initialized single-device: re-exec with forced
@@ -84,31 +84,23 @@ def run(smoke: bool = False):
 
     coords_probe = rng.uniform(0, boxl, (n, 3))
 
-    def cfg_for(p):
+    def cfg_for(nb, p):
+        assert nb == n, (nb, n)
         return suggest_config(n, box, p, RCUT, nbr_capacity=48, slack=2.0,
                               nbr_method="cells", coords=coords_probe)
 
-    fused8 = make_distributed_force_fn(model, cfg_for(N_DEV),
-                                       make_dd_mesh(N_DEV), box, n)
+    fused8 = ForcePipeline(model, cfg_for(n, N_DEV), make_dd_mesh(N_DEV),
+                           box, n).build_force_fn()
 
-    # the server's pluggable executor: a coalesced batch of B requests
-    # rides one dispatch on a (B, N_DEV/B) mesh — the batch partitions the
-    # device set, so each request decomposes over fewer dd ranks (less
-    # Eq.-8 ghost work per request) and B requests pay one collective
-    # rendezvous instead of B.  All tenants share this system's box/types
-    # (the ensemble-farm scenario), so the per-request copies are ignored.
-    def executor_factory(nb, b):
-        assert nb == n, (nb, n)
-        dd_per = N_DEV // b
-        bf = make_batched_force_fn(model, cfg_for(dd_per),
-                                   make_ensemble_mesh(b, dd_per), box, n, b)
-
-        def fn(p, coords, _types, _mask, _box):
-            e, f, diag = bf(p, jnp.asarray(coords), types_j)
-            ovf = np.asarray(diag["overflow"]).reshape(b, -1).max(axis=1) > 0
-            return e, f, ovf
-
-        return fn
+    # the server's pluggable executor: each (atoms x batch) bucket is a
+    # replica-batched ForcePipeline dispatch on a (B, N_DEV/B) mesh — the
+    # batch partitions the device set, so each request decomposes over
+    # fewer dd ranks (less Eq.-8 ghost work per request) and B requests
+    # pay one collective rendezvous instead of B.  All tenants share this
+    # system's box/types (the ensemble-farm scenario).
+    executor_factory = pipeline_executor_factory(
+        model, box, types, cfg_for,
+        mesh_for=lambda b: make_ensemble_mesh(b, N_DEV // b))
 
     # a short straggler window: per-request service time is O(100ms) here,
     # so waiting a few ms coalesces the lockstep clients into full batches
@@ -202,7 +194,7 @@ def run(smoke: bool = False):
         "n_atoms": n, "n_devices": N_DEV, "rcut": RCUT, "density": DENSITY,
         "requests_per_client": n_req,
         "model": "dpse(8,16)x(32,32)",
-        "executor": "make_batched_force_fn (replica=B, dd=8/B)",
+        "executor": "pipeline_executor_factory (replica=B, dd=8/B)",
         "batch_window_ms": 10.0, "batch_buckets": list(buckets),
         "points": points,
         "speedup_c4": at4[0]["speedup"] if at4 else None,

@@ -3,6 +3,12 @@
 recorded observability trace (the ``events.jsonl`` written by
 ``repro.obs.Tracer.flush`` / ``ObsConfig.trace_dir``).
 
+The imbalance table carries a per-rank neighbor-slot occupancy column
+(``nbr_fill / nbr_slots`` from the pipeline's ``rank_occupancy`` counter)
+for capacity tuning: ranks pinned near 100% are about to overflow
+``nbr_capacity``; a low mesh-wide mean means the padded descriptor width
+can shrink.
+
 Usage:
   python scripts/trace_report.py experiments/traces/example_8rank_trace.jsonl
   python scripts/trace_report.py <trace.jsonl> --json report.json

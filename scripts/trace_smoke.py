@@ -38,8 +38,7 @@ def main(argv=None) -> int:
     import jax
     import numpy as np
 
-    from repro.core import DeepmdForceProvider, make_phase_probe_fns, \
-        suggest_config
+    from repro.core import DeepmdForceProvider, ForcePipeline, suggest_config
     from repro.dp import DPModel, paper_dpa1_config
     from repro.launch.mesh import make_dd_mesh
     from repro.md import (EngineConfig, MDEngine, build_solvated_protein,
@@ -74,8 +73,8 @@ def main(argv=None) -> int:
     # prefix probes (gather ⊂ assembly ⊂ inference ⊂ force_reduce)
     nn_pos = jax.numpy.asarray(np.asarray(state.positions)[np.asarray(nn_idx)])
     nn_types = jax.numpy.asarray(np.asarray(system.types)[np.asarray(nn_idx)])
-    probes = make_phase_probe_fns(model, dd, mesh, np.asarray(system.box),
-                                  len(nn_idx))
+    probes = ForcePipeline(model, dd, mesh, np.asarray(system.box),
+                           len(nn_idx)).build_phase_probes()
     thunks = {k: (lambda fn=fn: fn(params, nn_pos, nn_types))
               for k, fn in probes.items()}
     phases = timed_prefix_phases(tracer, thunks, iters=3, warmup=1)

@@ -1,7 +1,8 @@
 """The paper's contribution: virtual DD + distributed DP inference."""
 from .domain import (VirtualGrid, uniform_grid, balanced_planes, factor_grid,  # noqa: F401
                      select_local, select_ghosts, partition_costs, atom_costs,
-                     bin_atoms, select_local_cells, select_ghosts_cells)
+                     bin_atoms, select_local_cells, select_ghosts_cells,
+                     interior_fraction_estimate)
 from .ddinfer import (DDConfig, DDState, suggest_config,  # noqa: F401
                       make_distributed_force_fn, make_assembly_fn,
                       make_evaluation_fn, make_displacement_check_fn,
@@ -12,6 +13,7 @@ from .ddinfer import (DDConfig, DDState, suggest_config,  # noqa: F401
                       single_domain_forces_batched,
                       masked_neighbor_list, make_padded_batch_fn,
                       make_phase_probe_fns)
+from .pipeline import ForcePipeline, Stage  # noqa: F401
 from .nnpot import DeepmdForceProvider, UnitConversion  # noqa: F401
 from ..backend import (ForceBackend, ForceRequest, ForceResult,  # noqa: F401
                        StatefulForceBackend)

@@ -29,17 +29,17 @@ between rebuilds.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh
 
-from .. import compat
 from ..dp.model import DPModel
 from ..kernels.ops import cell_filter_op
 from ..md import cells as cellmod
-from ..md.neighbors import max_displacement2, minimum_image
+from ..md.neighbors import minimum_image
 from .domain import (IMAGE_SHIFTS, VirtualGrid, atom_costs, balanced_planes,
                      bin_atoms, factor_grid, select_ghosts,
                      select_ghosts_cells, select_local, select_local_cells,
@@ -81,6 +81,51 @@ class DDConfig:
     # --- assembly amortization (GROMACS nstlist analogue) -----------------
     skin: float = 0.0            # Verlet buffer; 0 = rebuild every step
     nbr_capacity_eval: int = 0   # K after exact-cutoff compaction (0 = K)
+    # --- comms/compute overlap (pipeline.py; amortized owner_full only) ---
+    overlap: bool = False        # schedule interior DP work under collective 1
+    overlap_capacity: int = 0    # boundary-pass sub-buffer rows (0 = full C)
+    overlap_min_interior: float = 0.25  # advisory: below this measured
+    #   interior fraction the overlap split cannot hide the gather — callers
+    #   should build the sequential evaluation instead
+
+    def __post_init__(self):
+        """Config-time validation (satellite of ISSUE 8): reject geometries
+        and capacities that could previously only fail as silent trim /
+        overflow deep inside a jitted driver."""
+        if len(self.grid_dims) != 3 or min(self.grid_dims) < 1:
+            raise ValueError(
+                f"grid_dims {self.grid_dims} must be three positive factors "
+                "(use factor_grid/suggest_config)")
+        if min(self.local_capacity, self.ghost_capacity,
+               self.nbr_capacity) < 1:
+            raise ValueError(
+                f"capacities must be positive: local_capacity="
+                f"{self.local_capacity}, ghost_capacity="
+                f"{self.ghost_capacity}, nbr_capacity={self.nbr_capacity}")
+        if self.skin < 0:
+            raise ValueError(f"skin must be >= 0, got {self.skin}")
+        if self.nbr_capacity_eval > self.nbr_capacity:
+            raise ValueError(
+                f"nbr_capacity_eval {self.nbr_capacity_eval} > nbr_capacity "
+                f"{self.nbr_capacity}: evaluation compacts the skin-widened "
+                "build list down to k_eval entries; it cannot widen it")
+        if self.use_pallas and self.k_eval > 128:
+            raise ValueError(
+                f"k_eval {self.k_eval} > 128 with use_pallas: the fused "
+                "neighbor-attention kernel keeps the (heads, K, K) score "
+                "tile VMEM-resident with K padded to 128 lanes — cap "
+                "nbr_capacity_eval at 128 or disable use_pallas")
+        if self.overlap and self.force_mode != "owner_full":
+            raise ValueError(
+                "overlap=True requires force_mode='owner_full': the interior "
+                "pass trusts that every force contribution to a local row "
+                "comes from this rank's own buffer, which ghost_reduce's "
+                "cross-rank ghost-force sums break")
+        if self.overlap_capacity < 0 or not (
+                0.0 <= self.overlap_min_interior <= 1.0):
+            raise ValueError(
+                f"overlap_capacity {self.overlap_capacity} must be >= 0 and "
+                f"overlap_min_interior {self.overlap_min_interior} in [0, 1]")
 
     @property
     def n_ranks(self) -> int:
@@ -148,6 +193,9 @@ class DDState:
 
     l_idx: jax.Array       # (P*Cl,) int32 local atom indices (0-padded)
     l_mask: jax.Array      # (P*Cl,) bool
+    l_slot: jax.Array      # (P*Cl,) int32 replicated routing table: every
+    #   rank's l_idx concatenated in rank order — the partition stage's send
+    #   map (which padded-atom index fills each rank's local slot)
     g_idx: jax.Array       # (P*Cg,) int32 ghost atom indices
     g_shift: jax.Array     # (P*Cg, 3) int32 integer periodic image shifts
     g_mask: jax.Array      # (P*Cg,) bool
@@ -465,89 +513,10 @@ def _assemble_rank(coords_all, types_all, box, grid: VirtualGrid,
                 local_count=l_count, ghost_count=g_count, overflow=overflow)
 
 
-def _evaluate_rank(model: DPModel, params, coords_all, ref_all, st: dict,
-                   box, cfg: DDConfig, rcut: float):
-    """Evaluation phase for one rank: reuse the assembled state at fresh
-    positions.
-
-    Buffer coordinates are rebuilt as ``current + (stored_shift - img) * box``
-    where ``img`` is the integer box crossing since the reference — an exact
-    unwrap (the correction is an integer multiple of the box), so when
-    ``ref_all is coords_all`` (fused per-step path) this reproduces the
-    assembly-time buffer bitwise.  The stale skin-widened list is re-filtered
-    to the exact cutoff at current positions: DPA-1's attention softmax is
-    *not* oblivious to zero-envelope in-list neighbors, so the filter keeps
-    evaluation independent of which beyond-r_c entries the list carries.
-    """
-    n = coords_all.shape[0]
-    dtype = coords_all.dtype
-    box = jnp.asarray(box)
-    l_idx, g_idx = st["l_idx"], st["g_idx"]
-    img_l = jnp.round((coords_all[l_idx] - ref_all[l_idx]) / box)
-    img_g = jnp.round((coords_all[g_idx] - ref_all[g_idx]) / box)
-    buf_l = coords_all[l_idx] - img_l.astype(dtype) * box
-    buf_g = coords_all[g_idx] + (st["g_shift"].astype(dtype) - img_g) * box
-    buf_coords = _park(jnp.concatenate([buf_l, buf_g]), st["buf_mask"], box)
-
-    # re-filter the (skin-widened, possibly stale) list to the exact cutoff
-    nbr_idx = st["nbr_idx"]
-    dr = buf_coords[nbr_idx] - buf_coords[:, None, :]
-    d2 = (dr ** 2).sum(-1)
-    nbr_mask = st["nbr_mask"] * (d2 < rcut ** 2)
-    # canonical compaction: surviving entries sorted by buffer index, zeroed
-    # tail, trimmed to k_eval — the model input then depends only on the
-    # *within-cutoff* pair set, so a stale list gives bitwise-identical
-    # forces to a fresh one no matter which beyond-r_c borderline entries
-    # the two lists carry, and the model tensors stay at the unskinned K.
-    # On a fresh list at skin 0 (already index-sorted, compact, k_eval = K)
-    # this is the identity.
-    k_eval = min(cfg.k_eval, nbr_idx.shape[1])
-    trim_overflow = ((nbr_mask > 0).sum(1) > k_eval).any()
-    score = jnp.where(nbr_mask > 0, -nbr_idx.astype(jnp.float32), -jnp.inf)
-    _, order = jax.lax.top_k(score, k_eval)
-    nbr_mask = jnp.take_along_axis(nbr_mask, order, axis=1)
-    nbr_idx = jnp.where(nbr_mask > 0,
-                        jnp.take_along_axis(nbr_idx, order, axis=1), 0)
-
-    l_mask = st["l_mask"]
-    local_mask = jnp.concatenate([
-        l_mask.astype(dtype), jnp.zeros(cfg.ghost_capacity, dtype)])
-
-    f_global = jnp.zeros((n, 3), dtype)
-    if cfg.force_mode == "owner_full":
-        # Paper Sec. IV-A: the 2*r_c halo makes every first-layer ghost's
-        # descriptor exact, so differentiating the *full* buffer energy gives
-        # complete forces on local atoms; ghost rows are discarded and the
-        # final collective only assembles (each row has exactly one writer).
-        e_local, f_buf = model.energy_and_forces_dual(
-            params, buf_coords, st["buf_types"], nbr_idx, nbr_mask,
-            force_mask=st["buf_mask"], report_mask=local_mask, box=None)
-        # force reduction stays in the coordinate dtype (fp32) regardless of
-        # the model's compute policy — the mixed-precision contract
-        f_buf = f_buf.astype(dtype)
-        f_global = f_global.at[l_idx].add(f_buf[: cfg.local_capacity]
-                                          * l_mask[:, None])
-    else:
-        # Eq. 7 ghost-masking: energy over local atoms only; partial forces
-        # land on ghosts and are summed onto the owners by collective 2.
-        e_local, f_buf = model.energy_and_forces(
-            params, buf_coords, st["buf_types"], nbr_idx, nbr_mask,
-            local_mask, box=None)
-        f_buf = f_buf.astype(dtype)
-        f_global = f_global.at[l_idx].add(f_buf[: cfg.local_capacity]
-                                          * l_mask[:, None])
-        f_global = f_global.at[g_idx].add(f_buf[cfg.local_capacity:]
-                                          * st["g_mask"][:, None])
-    # occupancy of the model-facing (post-compaction) list: fill over the
-    # slots the valid buffer rows actually paid for — the observability
-    # layer's capacity-tuning signal (free: both factors already exist)
-    stats = {"nbr_fill": (nbr_mask > 0).sum().astype(dtype),
-             "nbr_slots": st["buf_mask"].sum() * k_eval}
-    return e_local, f_global, trim_overflow, stats
-
-
 # ---------------------------------------------------------------------------
-# shard_map drivers
+# shard_map drivers — the implementations live in repro.core.pipeline as
+# composable stage bodies; the make_* factories below are deprecation shims
+# over ForcePipeline (kept for one release; see README "Architecture")
 # ---------------------------------------------------------------------------
 
 def _pad_types(types: jax.Array, n_pad: int) -> jax.Array:
@@ -584,606 +553,150 @@ def _make_grid(coords_all, box, cfg: DDConfig, n_real: int) -> VirtualGrid:
                        cfg.balanced, cfg.rebalance)
 
 
-def _state_specs(axis: str) -> DDState:
-    return DDState(
-        l_idx=P(axis), l_mask=P(axis), g_idx=P(axis),
-        g_shift=P(axis, None), g_mask=P(axis), buf_types=P(axis),
-        buf_mask=P(axis), nbr_idx=P(axis, None), nbr_mask=P(axis, None),
-        local_count=P(), ghost_count=P(), cost_max=P(), overflow=P(),
-        ref=P(None, None))
-
-
-def make_assembly_fn(model: DPModel, cfg: DDConfig, mesh: Mesh, box,
-                     n_atoms: int):
-    """Build the jitted assembly phase: coords (N,3), types (N,) -> DDState.
-
-    The state is built at halo/cutoff ``+ skin`` and stays valid (bitwise-
-    reproducing a fresh assembly) until some atom moves more than skin/2
-    from ``state.ref`` — see :func:`make_displacement_check_fn`.
-    """
-    cfg.validate(box)
-    axis = cfg.axis
-    rcut = model.cfg.descriptor.rcut
-    box = jnp.asarray(box)
-    n_pad = cfg.padded_atoms(n_atoms)
-
-    def per_rank(coords_shard, types_all):
-        with jax.named_scope("obs.gather"):
-            coords_all = jax.lax.all_gather(coords_shard, axis, axis=0,
-                                            tiled=True)  # collective 1
-        rank = jax.lax.axis_index(axis)
-        with jax.named_scope("obs.assembly"):
-            grid = _make_grid(coords_all, box, cfg, n_atoms)
-            st = _assemble_rank(coords_all, types_all, box, grid, cfg, rcut,
-                                rank, n_atoms)
-        st["cost_max"] = jax.lax.pmax(st["local_count"] + st["ghost_count"],
-                                      axis)
-        st["local_count"] = jax.lax.psum(st["local_count"], axis)
-        st["ghost_count"] = jax.lax.psum(st["ghost_count"], axis)
-        st["overflow"] = jax.lax.psum(st["overflow"].astype(jnp.int32), axis)
-        return st
-
-    specs = _state_specs(axis)
-    out_specs = {f.name: getattr(specs, f.name)
-                 for f in dataclasses.fields(DDState) if f.name != "ref"}
-    mapped = compat.shard_map(per_rank, mesh=mesh,
-                              in_specs=(P(axis, None), P()),
-                              out_specs=out_specs)
-
-    def assemble(coords, types):
-        coords_p, types_p = _pad_atoms(coords, n_pad, box, types)
-        st = mapped(coords_p, types_p)
-        return DDState(ref=coords_p, **st)
-
-    return jax.jit(assemble)
-
-
-def make_evaluation_fn(model: DPModel, cfg: DDConfig, mesh: Mesh, box,
-                       n_atoms: int):
-    """Build the jitted evaluation phase.
-
-    Signature: f(params, coords (N,3), state: DDState) ->
-    (energy (), forces (N,3), diag).  Reuses the assembled state —
-    only the two per-step collectives (coordinate all-gather, force
-    reduction) plus the model inference remain; ``diag["max_disp2"]`` is the
-    mesh-wide max squared displacement from ``state.ref`` (each rank checks
-    its own shard; pmax mirrors ``md.neighbors.needs_rebuild``) and
-    ``diag["needs_rebuild"]`` its comparison against (skin/2)^2.
-    """
-    cfg.validate(box)
-    axis = cfg.axis
-    rcut = model.cfg.descriptor.rcut
-    box = jnp.asarray(box)
-    n_pad = cfg.padded_atoms(n_atoms)
-    chunk = n_pad // cfg.n_ranks
-
-    def per_rank(params, coords_shard, st: DDState):
-        with jax.named_scope("obs.gather"):
-            coords_all = jax.lax.all_gather(coords_shard, axis, axis=0,
-                                            tiled=True)  # collective 1
-        rank = jax.lax.axis_index(axis)
-        st_d = {f.name: getattr(st, f.name)
-                for f in dataclasses.fields(DDState) if f.name != "ref"}
-        with jax.named_scope("obs.inference"):
-            e_local, f_global, trim_ovf, stats = _evaluate_rank(
-                model, params, coords_all, st.ref, st_d, box, cfg, rcut)
-        with jax.named_scope("obs.force_reduce"):
-            energy = jax.lax.psum(e_local, axis)
-            if cfg.reduce_mode == "reduce_scatter":
-                forces = jax.lax.psum_scatter(
-                    f_global, axis, scatter_dimension=0,
-                    tiled=True)                              # collective 2'
-            else:
-                forces = jax.lax.psum(f_global, axis)        # collective 2
-        # skin check on this rank's shard only; pmax = the "psum'd" rebuild
-        # criterion (mirrors md.neighbors.needs_rebuild)
-        ref_shard = jax.lax.dynamic_slice_in_dim(st.ref, rank * chunk, chunk)
-        disp2 = jax.lax.pmax(max_displacement2(coords_shard, ref_shard, box),
-                             axis)
-        overflow = st.overflow + jax.lax.psum(trim_ovf.astype(jnp.int32),
-                                              axis)
-        total = st.local_count + st.ghost_count
-        # per-rank Eq.-8 cost vector, replicated: the masks shard along the
-        # mesh axis, so each rank contributes its own local+ghost count
-        rank_cost = jax.lax.all_gather(
-            st.l_mask.sum().astype(jnp.int32)
-            + st.g_mask.sum().astype(jnp.int32), axis)
-        occupancy = (jax.lax.psum(stats["nbr_fill"], axis)
-                     / jnp.maximum(jax.lax.psum(stats["nbr_slots"], axis),
-                                   1.0))
-        diag = {"local_count": st.local_count, "ghost_count": st.ghost_count,
-                "overflow": overflow, "max_disp2": disp2,
-                "cost_max": st.cost_max, "rank_cost": rank_cost,
-                "nbr_occupancy": occupancy,
-                # max/mean per-rank Eq.-8 cost: the load-imbalance figure the
-                # rebalance knob is meant to push toward 1.0
-                "cost_ratio": st.cost_max * cfg.n_ranks
-                              / jnp.maximum(total, 1).astype(jnp.float32),
-                "needs_rebuild": (disp2 > (0.5 * cfg.skin) ** 2)
-                                 | (st.overflow > 0)}
-        return energy, forces, diag
-
-    out_force_spec = (P(axis, None) if cfg.reduce_mode == "reduce_scatter"
-                      else P(None, None))
-    diag_specs = {k: P() for k in ("local_count", "ghost_count", "overflow",
-                                   "max_disp2", "cost_max", "rank_cost",
-                                   "nbr_occupancy", "cost_ratio",
-                                   "needs_rebuild")}
-    mapped = compat.shard_map(
-        per_rank, mesh=mesh,
-        in_specs=(P(), P(axis, None), _state_specs(axis)),
-        out_specs=(P(), out_force_spec, diag_specs))
-
-    def evaluate(params, coords, state):
-        coords_p = _pad_atoms(coords, n_pad, box)
-        e, f, diag = mapped(params, coords_p, state)
-        return e, f[:n_atoms], diag
-
-    return jax.jit(evaluate)
-
-
-def make_displacement_check_fn(cfg: DDConfig, mesh: Mesh, box, n_atoms: int):
-    """Standalone psum'd rebuild check: f(coords (N,3), state) -> () bool.
-
-    True when any atom moved more than skin/2 since ``state.ref`` (each rank
-    scans only its shard; pmax across the mesh) or the build overflowed —
-    the distributed mirror of ``md.neighbors.needs_rebuild``.
-    """
-    axis = cfg.axis
-    box = jnp.asarray(box)
-    n_pad = cfg.padded_atoms(n_atoms)
-    chunk = n_pad // cfg.n_ranks
-
-    def per_rank(coords_shard, ref):
-        rank = jax.lax.axis_index(axis)
-        ref_shard = jax.lax.dynamic_slice_in_dim(ref, rank * chunk, chunk)
-        return jax.lax.pmax(max_displacement2(coords_shard, ref_shard, box),
-                            axis)
-
-    mapped = compat.shard_map(per_rank, mesh=mesh,
-                              in_specs=(P(axis, None), P(None, None)),
-                              out_specs=P())
-
-    def check(coords, state):
-        disp2 = mapped(_pad_atoms(coords, n_pad, box), state.ref)
-        return (disp2 > (0.5 * cfg.skin) ** 2) | (state.overflow > 0)
-
-    return jax.jit(check)
-
-
-def make_distributed_force_fn(model: DPModel, cfg: DDConfig, mesh: Mesh,
-                              box, n_atoms: int):
-    """Build the jitted SPMD force function (per-step assembly + evaluation).
-
-    Signature: f(params, coords (N,3), types (N,)) ->
-    (energy (), forces (N,3), diag).  One all-gather feeds both phases
-    (assembly runs with ``ref = current`` so the wrap-correction is exactly
-    zero); the atom axis is padded to a mesh multiple internally, so any
-    ``n_atoms`` works with either reduce mode, and the padding is sliced off
-    on return.  For amortized assembly use :func:`make_assembly_fn` +
-    :func:`make_evaluation_fn` instead.
-    """
-    cfg.validate(box)
-    axis = cfg.axis
-    rcut = model.cfg.descriptor.rcut
-    box = jnp.asarray(box)
-    n_pad = cfg.padded_atoms(n_atoms)
-
-    def per_rank(params, coords_shard, types_all):
-        with jax.named_scope("obs.gather"):
-            coords_all = jax.lax.all_gather(coords_shard, axis, axis=0,
-                                            tiled=True)  # collective 1
-        rank = jax.lax.axis_index(axis)
-        with jax.named_scope("obs.assembly"):
-            grid = _make_grid(coords_all, box, cfg, n_atoms)
-            st = _assemble_rank(coords_all, types_all, box, grid, cfg, rcut,
-                                rank, n_atoms)
-        with jax.named_scope("obs.inference"):
-            e_local, f_global, trim_ovf, stats = _evaluate_rank(
-                model, params, coords_all, coords_all, st, box, cfg, rcut)
-        st["overflow"] = st["overflow"] | trim_ovf
-        with jax.named_scope("obs.force_reduce"):
-            energy = jax.lax.psum(e_local, axis)
-            if cfg.reduce_mode == "reduce_scatter":
-                forces = jax.lax.psum_scatter(
-                    f_global, axis, scatter_dimension=0,
-                    tiled=True)                              # collective 2'
-            else:
-                forces = jax.lax.psum(f_global, axis)        # collective 2
-        rank_cost = jax.lax.all_gather(st["local_count"] + st["ghost_count"],
-                                       axis)
-        cost_max = jax.lax.pmax(st["local_count"] + st["ghost_count"], axis)
-        local_count = jax.lax.psum(st["local_count"], axis)
-        ghost_count = jax.lax.psum(st["ghost_count"], axis)
-        occupancy = (jax.lax.psum(stats["nbr_fill"], axis)
-                     / jnp.maximum(jax.lax.psum(stats["nbr_slots"], axis),
-                                   1.0))
-        diag = {"local_count": local_count, "ghost_count": ghost_count,
-                "cost_max": cost_max, "rank_cost": rank_cost,
-                "nbr_occupancy": occupancy,
-                "cost_ratio": cost_max * cfg.n_ranks
-                              / jnp.maximum(local_count + ghost_count,
-                                            1).astype(jnp.float32),
-                "overflow": jax.lax.psum(st["overflow"].astype(jnp.int32),
-                                         axis)}
-        return energy, forces, diag
-
-    out_force_spec = (P(axis, None) if cfg.reduce_mode == "reduce_scatter"
-                      else P(None, None))
-    mapped = compat.shard_map(
-        per_rank, mesh=mesh,
-        in_specs=(P(), P(axis, None), P()),
-        out_specs=(P(), out_force_spec,
-                   {"local_count": P(), "ghost_count": P(), "cost_max": P(),
-                    "rank_cost": P(), "nbr_occupancy": P(),
-                    "cost_ratio": P(), "overflow": P()}))
-
-    def fn(params, coords, types):
-        coords_p, types_p = _pad_atoms(coords, n_pad, box, types)
-        e, f, diag = mapped(params, coords_p, types_p)
-        return e, f[:n_atoms], diag
-
-    return jax.jit(fn)
-
-
-def make_phase_probe_fns(model: DPModel, cfg: DDConfig, mesh: Mesh, box,
-                         n_atoms: int) -> dict:
-    """Prefix probes attributing the fused driver's cost to its phases.
-
-    Returns an ordered ``{phase: jitted f(params, coords, types)}`` dict
-    where each probe executes :func:`make_distributed_force_fn`'s pipeline
-    *through* that phase and stops (gather ⊂ assembly ⊂ inference ⊂
-    force_reduce); the last entry IS the full fused driver.  Successive
-    wall-time differences (``repro.obs.timed_prefix_phases``) therefore
-    measure — not model — the paper's Fig. 12 shares: coordinate
-    broadcast, DD assembly, DP inference, force collective.  Each partial
-    probe reduces its intermediates to a per-rank scalar with no further
-    collective, so the phases after its cut contribute nothing.
-    """
-    cfg.validate(box)
-    axis = cfg.axis
-    rcut = model.cfg.descriptor.rcut
-    box_j = jnp.asarray(box)
-    n_pad = cfg.padded_atoms(n_atoms)
-
-    def gather_rank(params, coords_shard, types_all):
-        coords_all = jax.lax.all_gather(coords_shard, axis, axis=0,
-                                        tiled=True)
-        return coords_all.sum()
-
-    def assembly_rank(params, coords_shard, types_all):
-        coords_all = jax.lax.all_gather(coords_shard, axis, axis=0,
-                                        tiled=True)
-        rank = jax.lax.axis_index(axis)
-        grid = _make_grid(coords_all, box_j, cfg, n_atoms)
-        st = _assemble_rank(coords_all, types_all, box_j, grid, cfg, rcut,
-                            rank, n_atoms)
-        # depend on every expensive assembly output so nothing is DCE'd
-        return (st["nbr_idx"].sum() + st["nbr_mask"].sum()
-                + st["local_count"].astype(jnp.float32)
-                + st["ghost_count"].astype(jnp.float32))
-
-    def inference_rank(params, coords_shard, types_all):
-        coords_all = jax.lax.all_gather(coords_shard, axis, axis=0,
-                                        tiled=True)
-        rank = jax.lax.axis_index(axis)
-        grid = _make_grid(coords_all, box_j, cfg, n_atoms)
-        st = _assemble_rank(coords_all, types_all, box_j, grid, cfg, rcut,
-                            rank, n_atoms)
-        e, f, _, _ = _evaluate_rank(model, params, coords_all, coords_all,
-                                    st, box_j, cfg, rcut)
-        return e + f.sum()
-
-    def wrap(per_rank):
-        # each rank emits its scalar as a (1,) shard -> (P,) global output
-        mapped = compat.shard_map(
-            lambda *a: jnp.reshape(per_rank(*a), (1,)), mesh=mesh,
-            in_specs=(P(), P(axis, None), P()), out_specs=P(axis))
-
-        def fn(params, coords, types):
-            coords_p, types_p = _pad_atoms(coords, n_pad, box_j, types)
-            return mapped(params, coords_p, types_p)
-
-        return jax.jit(fn)
-
-    full = make_distributed_force_fn(model, cfg, mesh, box, n_atoms)
-    return {"gather": wrap(gather_rank),
-            "assembly": wrap(assembly_rank),
-            "inference": wrap(inference_rank),
-            "force_reduce": full}
-
-
-# ---------------------------------------------------------------------------
-# Replica-batched drivers: R independent replicas of the same system as one
-# SPMD program on a 2-D (replica x dd) mesh.  The replica axis of every input
-# is sharded over the mesh's replica dimension; the replicas resident on a
-# device group are vmapped, so each step issues ONE batched coordinate
-# all-gather and ONE batched force reduction over the dd axis instead of R
-# sequential collective pairs.  All collectives name only ``cfg.axis``, so
-# they stay within a replica's dd group — replicas never communicate here
-# (replica exchange is a separate move, see ``repro.ensemble.exchange``).
-# ---------------------------------------------------------------------------
-
-def _replica_layout(mesh: Mesh, cfg: DDConfig, n_replicas: int,
-                    replica_axis: str) -> int:
-    """Validate the 2-D mesh and return replicas-per-device-group."""
-    if replica_axis not in mesh.shape or cfg.axis not in mesh.shape:
-        raise ValueError(
-            f"mesh axes {tuple(mesh.shape)} must include "
-            f"{replica_axis!r} and {cfg.axis!r}")
-    if mesh.shape[cfg.axis] != cfg.n_ranks:
-        raise ValueError(f"mesh {cfg.axis} size {mesh.shape[cfg.axis]} != "
-                         f"grid {cfg.n_ranks}")
-    rd = mesh.shape[replica_axis]
-    if n_replicas % rd:
-        raise ValueError(f"n_replicas {n_replicas} not divisible by the "
-                         f"{replica_axis!r} mesh axis ({rd})")
-    return n_replicas // rd
-
-
-def _ens_state_specs(rep: str, axis: str) -> DDState:
-    return DDState(
-        l_idx=P(rep, axis), l_mask=P(rep, axis), g_idx=P(rep, axis),
-        g_shift=P(rep, axis, None), g_mask=P(rep, axis),
-        buf_types=P(rep, axis), buf_mask=P(rep, axis),
-        nbr_idx=P(rep, axis, None), nbr_mask=P(rep, axis, None),
-        local_count=P(rep), ghost_count=P(rep), cost_max=P(rep),
-        overflow=P(rep), ref=P(rep, None, None))
-
-
 def _pad_atoms_batched(coords: jax.Array, n_pad: int, box) -> jax.Array:
     """(R, N, 3) -> (R, n_pad, 3) with the same deterministic parking as
     :func:`_pad_atoms` (identical pad per replica)."""
     return jax.vmap(lambda c: _pad_atoms(c, n_pad, box))(coords)
 
 
+def _pipeline(model, cfg: DDConfig, mesh: Mesh, box, n_atoms: int,
+              n_replicas: int = 0, replica_axis: str = "replica"):
+    # lazy import: repro.core.pipeline imports the assembly primitives from
+    # this module, so the delegation must resolve at call time
+    from .pipeline import ForcePipeline
+    return ForcePipeline(model, cfg, mesh, box, n_atoms,
+                         n_replicas=n_replicas, replica_axis=replica_axis)
+
+
+_DEPRECATION_WARNED: set = set()
+
+
+def _warn_shim(old: str, new: str) -> None:
+    if old in _DEPRECATION_WARNED:
+        return
+    _DEPRECATION_WARNED.add(old)
+    warnings.warn(
+        f"repro.core.ddinfer.{old} is a deprecation shim over "
+        f"repro.core.pipeline.ForcePipeline.{new}() and will be removed in "
+        "the next release; build a ForcePipeline instead (see README "
+        "'Architecture')", DeprecationWarning, stacklevel=3)
+
+
+def make_assembly_fn(model: DPModel, cfg: DDConfig, mesh: Mesh, box,
+                     n_atoms: int):
+    """Deprecation shim: ``ForcePipeline(...).build_assembly_fn()``.
+
+    Build the jitted assembly phase: coords (N,3), types (N,) -> DDState.
+    The state is built at halo/cutoff ``+ skin`` and stays valid (bitwise-
+    reproducing a fresh assembly) until some atom moves more than skin/2
+    from ``state.ref`` — see :func:`make_displacement_check_fn`.
+    """
+    _warn_shim("make_assembly_fn", "build_assembly_fn")
+    return _pipeline(model, cfg, mesh, box, n_atoms).build_assembly_fn()
+
+
+def make_evaluation_fn(model: DPModel, cfg: DDConfig, mesh: Mesh, box,
+                       n_atoms: int):
+    """Deprecation shim: ``ForcePipeline(...).build_evaluation_fn()``.
+
+    Build the jitted evaluation phase: f(params, coords (N,3), state) ->
+    (energy (), forces (N,3), diag), reusing the assembled state across
+    steps (``DDConfig.overlap`` schedules the interior pass against the
+    all-gather).
+    """
+    _warn_shim("make_evaluation_fn", "build_evaluation_fn")
+    return _pipeline(model, cfg, mesh, box, n_atoms).build_evaluation_fn()
+
+
+def make_displacement_check_fn(cfg: DDConfig, mesh: Mesh, box, n_atoms: int):
+    """Deprecation shim: ``ForcePipeline(...).build_check_fn()``.
+
+    Standalone psum'd rebuild check: f(coords (N,3), state) -> () bool,
+    the distributed mirror of ``md.neighbors.needs_rebuild``.
+    """
+    _warn_shim("make_displacement_check_fn", "build_check_fn")
+    return _pipeline(None, cfg, mesh, box, n_atoms).build_check_fn()
+
+
+def make_distributed_force_fn(model: DPModel, cfg: DDConfig, mesh: Mesh,
+                              box, n_atoms: int):
+    """Deprecation shim: ``ForcePipeline(...).build_force_fn()``.
+
+    Build the jitted SPMD force function (fused per-step assembly +
+    evaluation): f(params, coords (N,3), types (N,)) ->
+    (energy (), forces (N,3), diag).
+    """
+    _warn_shim("make_distributed_force_fn", "build_force_fn")
+    return _pipeline(model, cfg, mesh, box, n_atoms).build_force_fn()
+
+
+def make_phase_probe_fns(model: DPModel, cfg: DDConfig, mesh: Mesh, box,
+                         n_atoms: int) -> dict:
+    """Deprecation shim: ``ForcePipeline(...).build_phase_probes()``.
+
+    Ordered ``{phase: jitted f(params, coords, types)}`` prefix probes
+    attributing the fused driver's cost to its stages (paper Fig. 12);
+    the last entry IS the full fused driver.
+    """
+    _warn_shim("make_phase_probe_fns", "build_phase_probes")
+    return _pipeline(model, cfg, mesh, box, n_atoms).build_phase_probes()
+
+
+# ---------------------------------------------------------------------------
+# Replica-batched drivers: R independent replicas of the same system as one
+# SPMD program on a 2-D (replica x dd) mesh.  Batching is a pipeline
+# *transform* (repro.core.pipeline._AxisOps), not a separate factory copy —
+# these shims just pass ``n_replicas``/``replica_axis`` through.
+# ---------------------------------------------------------------------------
+
 def make_batched_assembly_fn(model: DPModel, cfg: DDConfig, mesh: Mesh, box,
                              n_atoms: int, n_replicas: int,
                              replica_axis: str = "replica"):
-    """Replica-batched :func:`make_assembly_fn`.
+    """Deprecation shim: replica-batched ``build_assembly_fn()``.
 
     Signature: f(coords (R, N, 3), types (N,)) -> DDState whose every leaf
     carries a leading replica axis ((R,) for the scalar diagnostics).
     """
-    cfg.validate(box)
-    axis = cfg.axis
-    _replica_layout(mesh, cfg, n_replicas, replica_axis)
-    rcut = model.cfg.descriptor.rcut
-    box = jnp.asarray(box)
-    n_pad = cfg.padded_atoms(n_atoms)
-
-    def per_rank(coords_shard, types_all):
-        # (r_loc, n_pad/P, 3) -> one batched collective 1 -> (r_loc, n_pad, 3)
-        with jax.named_scope("obs.gather"):
-            coords_all = jax.lax.all_gather(coords_shard, axis, axis=1,
-                                            tiled=True)
-        rank = jax.lax.axis_index(axis)
-
-        def one(coords_one):
-            with jax.named_scope("obs.assembly"):
-                grid = _make_grid(coords_one, box, cfg, n_atoms)
-                return _assemble_rank(coords_one, types_all, box, grid, cfg,
-                                      rcut, rank, n_atoms)
-
-        st = jax.vmap(one)(coords_all)
-        st["cost_max"] = jax.lax.pmax(st["local_count"] + st["ghost_count"],
-                                      axis)
-        st["local_count"] = jax.lax.psum(st["local_count"], axis)
-        st["ghost_count"] = jax.lax.psum(st["ghost_count"], axis)
-        st["overflow"] = jax.lax.psum(st["overflow"].astype(jnp.int32), axis)
-        return st
-
-    specs = _ens_state_specs(replica_axis, axis)
-    out_specs = {f.name: getattr(specs, f.name)
-                 for f in dataclasses.fields(DDState) if f.name != "ref"}
-    mapped = compat.shard_map(per_rank, mesh=mesh,
-                              in_specs=(P(replica_axis, axis, None), P()),
-                              out_specs=out_specs)
-
-    def assemble(coords, types):
-        coords_p = _pad_atoms_batched(coords, n_pad, box)
-        st = mapped(coords_p, types)
-        return DDState(ref=coords_p, **st)
-
-    return jax.jit(assemble)
+    _warn_shim("make_batched_assembly_fn", "build_assembly_fn")
+    return _pipeline(model, cfg, mesh, box, n_atoms, n_replicas,
+                     replica_axis).build_assembly_fn()
 
 
 def make_batched_evaluation_fn(model: DPModel, cfg: DDConfig, mesh: Mesh,
                                box, n_atoms: int, n_replicas: int,
                                replica_axis: str = "replica"):
-    """Replica-batched :func:`make_evaluation_fn`.
+    """Deprecation shim: replica-batched ``build_evaluation_fn()``.
 
     Signature: f(params, coords (R, N, 3), state) ->
-    (energy (R,), forces (R, N, 3), diag of (R,) leaves).  Per-replica
-    semantics are identical to the unbatched evaluation — ``needs_rebuild``
-    and the overflow counts are reported per replica so callers can track
-    each trajectory's skin budget independently.
+    (energy (R,), forces (R, N, 3), diag of (R,) leaves).
     """
-    cfg.validate(box)
-    axis = cfg.axis
-    _replica_layout(mesh, cfg, n_replicas, replica_axis)
-    rcut = model.cfg.descriptor.rcut
-    box = jnp.asarray(box)
-    n_pad = cfg.padded_atoms(n_atoms)
-    chunk = n_pad // cfg.n_ranks
-
-    def per_rank(params, coords_shard, st: DDState):
-        coords_all = jax.lax.all_gather(coords_shard, axis, axis=1,
-                                        tiled=True)  # batched collective 1
-        rank = jax.lax.axis_index(axis)
-        st_d = {f.name: getattr(st, f.name)
-                for f in dataclasses.fields(DDState) if f.name != "ref"}
-
-        def one(coords_one, ref_one, st_one):
-            return _evaluate_rank(model, params, coords_one, ref_one,
-                                  st_one, box, cfg, rcut)
-
-        e_local, f_global, trim_ovf, stats = jax.vmap(one)(coords_all,
-                                                           st.ref, st_d)
-        energy = jax.lax.psum(e_local, axis)
-        if cfg.reduce_mode == "reduce_scatter":
-            forces = jax.lax.psum_scatter(f_global, axis, scatter_dimension=1,
-                                          tiled=True)  # batched collective 2'
-        else:
-            forces = jax.lax.psum(f_global, axis)       # batched collective 2
-        ref_shard = jax.lax.dynamic_slice_in_dim(st.ref, rank * chunk, chunk,
-                                                 axis=1)
-        disp2 = jax.lax.pmax(
-            jax.vmap(lambda c, r: max_displacement2(c, r, box))(
-                coords_shard, ref_shard), axis)
-        overflow = st.overflow + jax.lax.psum(trim_ovf.astype(jnp.int32),
-                                              axis)
-        total = st.local_count + st.ghost_count
-        # (r_loc, P) per-replica per-rank cost vectors, gathered on axis 1
-        rank_cost = jax.lax.all_gather(
-            st.l_mask.sum(1).astype(jnp.int32)
-            + st.g_mask.sum(1).astype(jnp.int32), axis, axis=1)
-        occupancy = (jax.lax.psum(stats["nbr_fill"], axis)
-                     / jnp.maximum(jax.lax.psum(stats["nbr_slots"], axis),
-                                   1.0))
-        diag = {"local_count": st.local_count, "ghost_count": st.ghost_count,
-                "overflow": overflow, "max_disp2": disp2,
-                "cost_max": st.cost_max, "rank_cost": rank_cost,
-                "nbr_occupancy": occupancy,
-                "cost_ratio": st.cost_max * cfg.n_ranks
-                              / jnp.maximum(total, 1).astype(jnp.float32),
-                "needs_rebuild": (disp2 > (0.5 * cfg.skin) ** 2)
-                                 | (st.overflow > 0)}
-        return energy, forces, diag
-
-    out_force_spec = (P(replica_axis, axis, None)
-                      if cfg.reduce_mode == "reduce_scatter"
-                      else P(replica_axis, None, None))
-    diag_specs = {k: P(replica_axis)
-                  for k in ("local_count", "ghost_count", "overflow",
-                            "max_disp2", "cost_max", "nbr_occupancy",
-                            "cost_ratio", "needs_rebuild")}
-    diag_specs["rank_cost"] = P(replica_axis, None)
-    mapped = compat.shard_map(
-        per_rank, mesh=mesh,
-        in_specs=(P(), P(replica_axis, axis, None),
-                  _ens_state_specs(replica_axis, axis)),
-        out_specs=(P(replica_axis), out_force_spec, diag_specs))
-
-    def evaluate(params, coords, state):
-        coords_p = _pad_atoms_batched(coords, n_pad, box)
-        e, f, diag = mapped(params, coords_p, state)
-        return e, f[:, :n_atoms], diag
-
-    return jax.jit(evaluate)
+    _warn_shim("make_batched_evaluation_fn", "build_evaluation_fn")
+    return _pipeline(model, cfg, mesh, box, n_atoms, n_replicas,
+                     replica_axis).build_evaluation_fn()
 
 
 def make_batched_check_fn(cfg: DDConfig, mesh: Mesh, box, n_atoms: int,
                           n_replicas: int, replica_axis: str = "replica"):
-    """Replica-batched :func:`make_displacement_check_fn`:
+    """Deprecation shim: replica-batched ``build_check_fn()``:
     f(coords (R, N, 3), state) -> (R,) bool per-replica rebuild flags."""
-    axis = cfg.axis
-    _replica_layout(mesh, cfg, n_replicas, replica_axis)
-    box = jnp.asarray(box)
-    n_pad = cfg.padded_atoms(n_atoms)
-    chunk = n_pad // cfg.n_ranks
-
-    def per_rank(coords_shard, ref, overflow):
-        rank = jax.lax.axis_index(axis)
-        ref_shard = jax.lax.dynamic_slice_in_dim(ref, rank * chunk, chunk,
-                                                 axis=1)
-        disp2 = jax.lax.pmax(
-            jax.vmap(lambda c, r: max_displacement2(c, r, box))(
-                coords_shard, ref_shard), axis)
-        return (disp2 > (0.5 * cfg.skin) ** 2) | (overflow > 0)
-
-    mapped = compat.shard_map(
-        per_rank, mesh=mesh,
-        in_specs=(P(replica_axis, axis, None), P(replica_axis, None, None),
-                  P(replica_axis)),
-        out_specs=P(replica_axis))
-
-    def check(coords, state):
-        return mapped(_pad_atoms_batched(coords, n_pad, box), state.ref,
-                      state.overflow)
-
-    return jax.jit(check)
+    _warn_shim("make_batched_check_fn", "build_check_fn")
+    return _pipeline(None, cfg, mesh, box, n_atoms, n_replicas,
+                     replica_axis).build_check_fn()
 
 
 def make_batched_force_fn(model: DPModel, cfg: DDConfig, mesh: Mesh, box,
                           n_atoms: int, n_replicas: int,
                           replica_axis: str = "replica"):
-    """Replica-batched :func:`make_distributed_force_fn` (fused per-step
-    assembly + evaluation).
+    """Deprecation shim: replica-batched ``build_force_fn()`` (fused
+    per-step assembly + evaluation).
 
     Signature: f(params, coords (R, N, 3), types (N,)) ->
-    (energy (R,), forces (R, N, 3), diag of (R,) leaves).  One batched
-    all-gather feeds every local replica's virtual decomposition; one
-    batched reduction returns all their forces.
+    (energy (R,), forces (R, N, 3), diag of (R,) leaves).
     """
-    cfg.validate(box)
-    axis = cfg.axis
-    _replica_layout(mesh, cfg, n_replicas, replica_axis)
-    rcut = model.cfg.descriptor.rcut
-    box = jnp.asarray(box)
-    n_pad = cfg.padded_atoms(n_atoms)
+    _warn_shim("make_batched_force_fn", "build_force_fn")
+    return _pipeline(model, cfg, mesh, box, n_atoms, n_replicas,
+                     replica_axis).build_force_fn()
 
-    def per_rank(params, coords_shard, types_all):
-        with jax.named_scope("obs.gather"):
-            coords_all = jax.lax.all_gather(coords_shard, axis, axis=1,
-                                            tiled=True)  # batched collective 1
-        rank = jax.lax.axis_index(axis)
-
-        def one(coords_one):
-            with jax.named_scope("obs.assembly"):
-                grid = _make_grid(coords_one, box, cfg, n_atoms)
-                st = _assemble_rank(coords_one, types_all, box, grid, cfg,
-                                    rcut, rank, n_atoms)
-            with jax.named_scope("obs.inference"):
-                e, f, trim_ovf, stats = _evaluate_rank(
-                    model, params, coords_one, coords_one, st, box, cfg, rcut)
-            return (e, f, st["overflow"] | trim_ovf, st["local_count"],
-                    st["ghost_count"], stats)
-
-        (e_local, f_global, ovf, l_count, g_count,
-         stats) = jax.vmap(one)(coords_all)
-        with jax.named_scope("obs.force_reduce"):
-            energy = jax.lax.psum(e_local, axis)
-            if cfg.reduce_mode == "reduce_scatter":
-                forces = jax.lax.psum_scatter(
-                    f_global, axis, scatter_dimension=1,
-                    tiled=True)                         # batched collective 2'
-            else:
-                forces = jax.lax.psum(f_global, axis)   # batched collective 2
-        cost_max = jax.lax.pmax(l_count + g_count, axis)
-        local_count = jax.lax.psum(l_count, axis)
-        ghost_count = jax.lax.psum(g_count, axis)
-        rank_cost = jax.lax.all_gather(l_count + g_count, axis, axis=1)
-        occupancy = (jax.lax.psum(stats["nbr_fill"], axis)
-                     / jnp.maximum(jax.lax.psum(stats["nbr_slots"], axis),
-                                   1.0))
-        diag = {"local_count": local_count, "ghost_count": ghost_count,
-                "cost_max": cost_max, "rank_cost": rank_cost,
-                "nbr_occupancy": occupancy,
-                "cost_ratio": cost_max * cfg.n_ranks
-                              / jnp.maximum(local_count + ghost_count,
-                                            1).astype(jnp.float32),
-                "overflow": jax.lax.psum(ovf.astype(jnp.int32), axis)}
-        return energy, forces, diag
-
-    out_force_spec = (P(replica_axis, axis, None)
-                      if cfg.reduce_mode == "reduce_scatter"
-                      else P(replica_axis, None, None))
-    diag_specs = {k: P(replica_axis) for k in ("local_count", "ghost_count",
-                                               "cost_max", "nbr_occupancy",
-                                               "cost_ratio", "overflow")}
-    diag_specs["rank_cost"] = P(replica_axis, None)
-    mapped = compat.shard_map(
-        per_rank, mesh=mesh,
-        in_specs=(P(), P(replica_axis, axis, None), P()),
-        out_specs=(P(replica_axis), out_force_spec, diag_specs))
-
-    def fn(params, coords, types):
-        coords_p = _pad_atoms_batched(coords, n_pad, box)
-        e, f, diag = mapped(params, coords_p, _pad_types(types, n_pad))
-        return e, f[:, :n_atoms], diag
-
-    return jax.jit(fn)
 
 
 def masked_neighbor_list(coords: jax.Array, box: jax.Array, rcut: float,

@@ -377,6 +377,26 @@ def atom_costs(coords: jax.Array, box, grid: VirtualGrid,
     return jax.vmap(count)(jnp.arange(grid.n_ranks)).sum(0)
 
 
+def interior_fraction_estimate(box, dims, margin: float) -> float:
+    """Uniform-density estimate of the comms-overlap interior fraction.
+
+    The overlap scheduler (``ForcePipeline`` with ``DDConfig.overlap``)
+    evaluates gather-free local rows concurrently with the all-gather; a
+    row is gather-free when its whole neighborhood is locally resident,
+    i.e. the atom sits deeper than ``margin`` from every subdomain face
+    (``margin ~ rcut`` for gather-free rows, ``~ 2*rcut`` for the stricter
+    interior class whose neighbors are also gather-free).  For a uniform
+    atom density on a ``dims`` grid of ``box``, that core region's volume
+    fraction is ``prod(max(0, s_i - 2*margin)) / prod(s_i)`` with ``s_i``
+    the subdomain side lengths — the fraction of inference work the
+    gather can hide, before load imbalance.  Returns 0 when the margin
+    consumes a whole side (subdomains too small to overlap anything)."""
+    box = np.asarray(box, np.float64)
+    sides = box / np.asarray(dims, np.float64)
+    core = np.clip(sides - 2.0 * margin, 0.0, None)
+    return float(np.prod(core / sides))
+
+
 def partition_costs(coords: jax.Array, box, grid: VirtualGrid,
                     halo: float) -> jax.Array:
     """(P,) per-rank local+ghost atom counts — the paper's Eq. 8 cost model

@@ -41,16 +41,16 @@ from jax.sharding import Mesh
 from ..backend import ForceRequest, ForceResult
 from ..dp.model import DPModel
 from ..md.neighbors import needs_rebuild as _nlist_needs_rebuild
-from .ddinfer import (DDConfig, make_assembly_fn, make_displacement_check_fn,
-                      make_distributed_force_fn, make_evaluation_fn,
-                      single_domain_forces, single_domain_forces_nlist,
-                      single_domain_state)
+from .ddinfer import (DDConfig, single_domain_forces,
+                      single_domain_forces_nlist, single_domain_state)
+from .pipeline import ForcePipeline
 
 
 # dd diag entries surfaced as per-step observability counters (see
 # repro.obs.trace): everything the Fig. 12 / imbalance reports consume
 _COUNTER_KEYS = ("local_count", "ghost_count", "cost_max", "cost_ratio",
-                 "rank_cost", "nbr_occupancy", "max_disp2")
+                 "rank_cost", "nbr_occupancy", "rank_occupancy", "max_disp2",
+                 "interior_frac")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -146,21 +146,21 @@ class DeepmdForceProvider:
         self.last_diag: Optional[dict] = None
 
     def backend_build_fns(self) -> None:
-        """Hook: (re)build the jitted distributed fns — called at init and
-        after every ``grow`` (capacities may have changed)."""
+        """Hook: (re)build the jitted distributed drivers from ONE
+        :class:`~repro.core.pipeline.ForcePipeline` — called at init and
+        after every ``grow`` (capacities may have changed).  The pipeline is
+        exposed as ``self.pipeline`` so callers (serve executors, phase
+        probes) can derive further compositions from the same stage list."""
         if self.dd_config is not None:
-            self._dist_fn = make_distributed_force_fn(
-                self.model, self.dd_config, self.mesh, self.box_model,
-                self.n_nn)
-            self._asm_fn = make_assembly_fn(
-                self.model, self.dd_config, self.mesh, self.box_model,
-                self.n_nn)
-            self._eval_fn = make_evaluation_fn(
-                self.model, self.dd_config, self.mesh, self.box_model,
-                self.n_nn)
-            self._check_fn = make_displacement_check_fn(
-                self.dd_config, self.mesh, self.box_model, self.n_nn)
+            self.pipeline = ForcePipeline(self.model, self.dd_config,
+                                          self.mesh, self.box_model,
+                                          self.n_nn)
+            self._dist_fn = self.pipeline.build_force_fn()
+            self._asm_fn = self.pipeline.build_assembly_fn()
+            self._eval_fn = self.pipeline.build_evaluation_fn()
+            self._check_fn = self.pipeline.build_check_fn()
         else:
+            self.pipeline = None
             self._dist_fn = None
 
     # -- amortized two-phase API (engine scan loop) -------------------------
@@ -247,13 +247,21 @@ class DeepmdForceProvider:
         self.growths += 1
         if self.dd_config is not None:
             c = self.dd_config
+            # the Pallas attention kernel caps the model-facing K at 128
+            # (DDConfig.__post_init__ rejects more); growth keeps the build
+            # list doubling regardless — only the compacted K saturates
+            k_eval = 2 * c.k_eval
+            if c.use_pallas:
+                k_eval = min(k_eval, 128)
             self.dd_config = dataclasses.replace(
                 c, nbr_capacity=2 * c.nbr_capacity,
-                nbr_capacity_eval=2 * c.k_eval,
+                nbr_capacity_eval=k_eval,
                 local_capacity=2 * c.local_capacity,
                 ghost_capacity=min(2 * c.ghost_capacity, 27 * self.n_nn),
                 cell_capacity=2 * c.cell_capacity,
-                subcell_capacity=2 * c.subcell_capacity)
+                subcell_capacity=2 * c.subcell_capacity,
+                overlap_capacity=(2 * c.overlap_capacity
+                                  if c.overlap_capacity else 0))
             self.backend_build_fns()
         else:
             self.nbr_capacity *= 2

@@ -28,12 +28,10 @@ import jax
 import numpy as np
 from jax.sharding import Mesh
 
-from ..core.ddinfer import (DDConfig, make_batched_assembly_fn,
-                            make_batched_check_fn, make_batched_evaluation_fn,
-                            make_batched_force_fn,
-                            single_domain_forces_batched,
+from ..core.ddinfer import (DDConfig, single_domain_forces_batched,
                             single_domain_forces_nlist, single_domain_state)
 from ..core.nnpot import DeepmdForceProvider, UnitConversion
+from ..core.pipeline import ForcePipeline
 from ..dp.model import DPModel
 from ..md.neighbors import needs_rebuild as _nlist_needs_rebuild
 
@@ -57,17 +55,19 @@ class BatchedDeepmdProvider(DeepmdForceProvider):
                          nbr_capacity=nbr_capacity, skin=skin)
 
     def backend_build_fns(self) -> None:
+        # the replica-batched drivers are the SAME pipeline with the batching
+        # transform applied (n_replicas > 0), not a separate factory family
         if self.dd_config is not None:
-            args = (self.model, self.dd_config, self.mesh, self.box_model,
-                    self.n_nn, self.n_replicas)
-            kw = dict(replica_axis=self.replica_axis)
-            self._dist_fn = make_batched_force_fn(*args, **kw)
-            self._asm_fn = make_batched_assembly_fn(*args, **kw)
-            self._eval_fn = make_batched_evaluation_fn(*args, **kw)
-            self._check_fn = make_batched_check_fn(
-                self.dd_config, self.mesh, self.box_model, self.n_nn,
-                self.n_replicas, replica_axis=self.replica_axis)
+            self.pipeline = ForcePipeline(
+                self.model, self.dd_config, self.mesh, self.box_model,
+                self.n_nn, n_replicas=self.n_replicas,
+                replica_axis=self.replica_axis)
+            self._dist_fn = self.pipeline.build_force_fn()
+            self._asm_fn = self.pipeline.build_assembly_fn()
+            self._eval_fn = self.pipeline.build_evaluation_fn()
+            self._check_fn = self.pipeline.build_check_fn()
         else:
+            self.pipeline = None
             self._dist_fn = None
 
     # -- vmapped single-domain path (documented backend_* hook overrides) ---

@@ -117,6 +117,15 @@ class MDEngine:
         self.diagnostics: dict = self._init_diagnostics()
 
     def _init_timings(self) -> dict:
+        # timings and per-step device-counter records share a lifetime —
+        # both are per-run.  Clearing them together keeps back-to-back
+        # run() calls from leaking the previous run's stale step counters
+        # (or duplicate absolute step numbers, after a restart from step 0)
+        # into the next trace.  Guarded: __init__ calls this before the
+        # tracer exists on some subclass construction orders.
+        tracer = getattr(self, "tracer", None)
+        if tracer is not None:
+            tracer.clear_steps()
         return {"classical": 0.0, "special": 0.0, "integrate": 0.0,
                 "neighbor": 0.0, "scan": 0.0}
 

@@ -73,24 +73,39 @@ def imbalance_table(events: list[dict]) -> dict:
     per-rank mean/max cost plus the time-averaged and worst-step
     ``cost_ratio`` (max-rank cost over mean-rank cost, the paper's
     imbalance figure).
+
+    The ``rank_occupancy`` counter (per-rank neighbor-slot fill fraction,
+    ``nbr_fill / nbr_slots`` gathered across the dd mesh) rides along as a
+    capacity-tuning column: a rank pinned near 1.0 is about to overflow its
+    ``nbr_capacity``; a mesh-wide low mean means the capacity (and with it
+    the padded descriptor width) can shrink.
     """
-    rows = []
-    for ev in _step_events(events):
-        rc = ev.get("rank_cost")
-        if rc is None:
-            continue
-        a = np.asarray(rc, np.float64)
-        rows.extend(a.reshape(-1, a.shape[-1]) if a.ndim > 1 else [a])
-    if not rows:
+    def _samples(key):
+        rows = []
+        for ev in _step_events(events):
+            v = ev.get(key)
+            if v is None:
+                continue
+            a = np.asarray(v, np.float64)
+            rows.extend(a.reshape(-1, a.shape[-1]) if a.ndim > 1 else [a])
+        return np.stack(rows) if rows else None
+
+    costs = _samples("rank_cost")                # (samples, P)
+    if costs is None:
         return {"ranks": [], "n_samples": 0}
-    costs = np.stack(rows)                       # (samples, P)
+    occ = _samples("rank_occupancy")             # (samples, P) or None
     mean_r = costs.mean(0)
     ratios = costs.max(1) / np.maximum(costs.mean(1), 1e-12)
+    ranks = [{"rank": r, "mean_cost": float(mean_r[r]),
+              "max_cost": float(costs[:, r].max())}
+             for r in range(costs.shape[1])]
+    if occ is not None and occ.shape[1] == costs.shape[1]:
+        for r, row in enumerate(ranks):
+            row["mean_occupancy"] = float(occ[:, r].mean())
+            row["max_occupancy"] = float(occ[:, r].max())
     return {
         "n_samples": int(costs.shape[0]),
-        "ranks": [{"rank": r, "mean_cost": float(mean_r[r]),
-                   "max_cost": float(costs[:, r].max())}
-                  for r in range(costs.shape[1])],
+        "ranks": ranks,
         "cost_ratio_mean": float(ratios.mean()),
         "cost_ratio_max": float(ratios.max()),
     }
@@ -157,10 +172,18 @@ def render(events: list[dict]) -> str:
     if imb.get("ranks"):
         parts.append(f"per-rank load imbalance "
                      f"({imb['n_samples']} step samples):")
-        parts.append(f"  {'rank':<6}{'mean cost':>12}{'max cost':>12}")
+        has_occ = any("mean_occupancy" in row for row in imb["ranks"])
+        hdr = f"  {'rank':<6}{'mean cost':>12}{'max cost':>12}"
+        if has_occ:
+            hdr += f"{'nbr occ':>10}{'occ max':>10}"
+        parts.append(hdr)
         for row in imb["ranks"]:
-            parts.append(f"  {row['rank']:<6}{row['mean_cost']:>12.1f}"
-                         f"{row['max_cost']:>12.0f}")
+            line = (f"  {row['rank']:<6}{row['mean_cost']:>12.1f}"
+                    f"{row['max_cost']:>12.0f}")
+            if has_occ:
+                line += (f"{row['mean_occupancy']:>9.1%}"
+                         f"{row['max_occupancy']:>9.1%}")
+            parts.append(line)
         parts.append(f"  cost_ratio (max/mean): "
                      f"mean {imb['cost_ratio_mean']:.3f}, "
                      f"worst step {imb['cost_ratio_max']:.3f}")

@@ -257,6 +257,19 @@ class Tracer:
             events = list(self.events)
         return export.write_chrome_trace(events, path)
 
+    def clear_steps(self) -> None:
+        """Drop buffered per-step device-counter events (``type == "step"``).
+
+        Step counters are per-run state, like the engine's ``timings``: a
+        new ``run()`` on the same engine clears them so the previous
+        trajectory's stale counters don't leak into the next trace (and
+        restarted trajectories don't produce duplicate absolute step
+        numbers).  Spans, meta and instant events survive — only the
+        device-counter records are per-run."""
+        with self._lock:
+            self.events[:] = [e for e in self.events
+                              if e.get("type") != "step"]
+
     def reset(self) -> None:
         with self._lock:
             self.events.clear()
@@ -271,7 +284,8 @@ def timed_prefix_phases(tracer: Tracer, probes: dict, iters: int = 3,
     ``probes`` maps phase name -> zero-arg thunk running the pipeline
     *through* that phase (each probe a strict superset of the previous one,
     e.g. gather ⊂ assembly ⊂ inference ⊂ force_reduce — see
-    :func:`repro.core.ddinfer.make_phase_probe_fns`).  Each probe's median
+    :meth:`repro.core.pipeline.ForcePipeline.build_phase_probes`).  Each
+    probe's median
     wall time over ``iters`` runs is measured after ``warmup`` compile
     calls; successive differences are the per-phase costs, recorded as
     ``calibrated`` spans on ``tracer`` and returned as {phase: seconds}.

@@ -22,4 +22,4 @@ from .batching import BucketingConfig, choose_bucket, pad_group  # noqa: F401
 from .client import RemoteForceProvider  # noqa: F401
 from .metrics import MetricsRegistry, TenantMetrics  # noqa: F401
 from .server import (ForceFuture, ForceServer, ServerOverloaded,  # noqa: F401
-                     ServeConfig)
+                     ServeConfig, pipeline_executor_factory)

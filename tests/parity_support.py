@@ -1,0 +1,60 @@
+"""Shared scaffolding for the distributed-parity suites.
+
+``SYSTEM_PRELUDE`` is the common subprocess header (the 160-atom periodic
+system, the paper DPA-1 model and its params) that ``test_pipeline.py``,
+``test_dd_reuse.py`` and ``test_ensemble_dd.py`` all prepend to their
+multi-device code blocks — one system definition instead of three
+copy-pasted ones, so every parity suite measures the same oracle inputs.
+``run_json`` runs such a block under forced host devices and decodes the
+single ``JSON{...}`` line it prints.
+"""
+import json
+
+from conftest import run_in_subprocess
+
+SYSTEM_PRELUDE = r"""
+import dataclasses, json
+import jax, jax.numpy as jnp, numpy as np
+from repro.dp import DPModel, paper_dpa1_config
+
+rng = np.random.default_rng(7)
+n, L = 160, 3.5
+box = np.array([L] * 3, np.float32)
+ch = rng.uniform(0, L, (n, 3)).astype(np.float32)
+coords = jnp.asarray(ch)
+types = jnp.asarray(rng.integers(0, 4, n), jnp.int32)
+model = DPModel(paper_dpa1_config(ntypes=4, rcut=0.6, sel=48))
+params = model.init_params(jax.random.PRNGKey(0))
+out = {}
+
+
+def bitwise(a, b):
+    return bool((np.asarray(a) == np.asarray(b)).all())
+
+
+def frozen_drift(scale=2e-4, halo_eff=None):
+    # In-bound random step with atoms near selection-critical plane
+    # boundaries frozen, so local/ghost sets cannot flip and stale-state
+    # reuse stays bitwise-comparable.
+    crit = [np.array([0.0, L / 2])]
+    if halo_eff is not None:
+        crit += [(np.array([0.0, L / 2]) + d) % L
+                 for d in (halo_eff, -halo_eff)]
+    crit = np.concatenate(crit)
+    frozen = np.zeros(n, bool)
+    for a in range(3):
+        d = np.abs(ch[:, a][:, None] - crit[None, :])
+        d = np.minimum(d, L - d)
+        frozen |= (d < 1e-3).any(1)
+    step = rng.uniform(-scale, scale, (n, 3))
+    step[frozen] = 0.0
+    return jnp.asarray(np.mod(ch + step, box).astype(np.float32))
+"""
+
+
+def run_json(code, n_devices=8, timeout=560):
+    """Run subprocess code (usually ``SYSTEM_PRELUDE + body``) and decode
+    the ``JSON{...}`` result line."""
+    stdout = run_in_subprocess(code, n_devices=n_devices, timeout=timeout)
+    line = [ln for ln in stdout.splitlines() if ln.startswith("JSON")][0]
+    return json.loads(line[4:])

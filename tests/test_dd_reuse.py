@@ -6,38 +6,25 @@
   skin/2 bound;
 * the psum'd displacement check stays quiet inside the bound, trips beyond
   it, and a rebuild restores parity;
-* the fused per-step path is bitwise-equal to assemble+evaluate;
 * the atom-axis padding makes ``reduce_scatter`` (and ``all_reduce``) work
   when n_atoms is not divisible by the mesh size.
 
+(The fused-vs-split bitwise block now lives in ``test_pipeline.py``; this
+suite keeps exercising the legacy ``make_*_fn`` shims on purpose.)
+
 Multi-device execution requires forced host devices, so these run in a
 subprocess (tests proper must see one device)."""
-import json
-
 import pytest
 
-from conftest import run_in_subprocess
+from parity_support import SYSTEM_PRELUDE, run_json
 
-_DD_REUSE_CODE = r"""
-import dataclasses, json
-import jax, jax.numpy as jnp, numpy as np
-from repro.dp import DPModel, paper_dpa1_config
+_DD_REUSE_CODE = SYSTEM_PRELUDE + r"""
 from repro.core import (suggest_config, make_distributed_force_fn,
                         make_assembly_fn, make_evaluation_fn,
                         make_displacement_check_fn, single_domain_forces)
 from repro.launch.mesh import make_dd_mesh
 
-rng = np.random.default_rng(7)
-n = 160
-L = 3.5
-box = np.array([L] * 3, np.float32)
-ch = rng.uniform(0, L, (n, 3)).astype(np.float32)
-coords = jnp.asarray(ch)
-types = jnp.asarray(rng.integers(0, 4, n), jnp.int32)
-model = DPModel(paper_dpa1_config(ntypes=4, rcut=0.6, sel=48))
-params = model.init_params(jax.random.PRNGKey(0))
 mesh = make_dd_mesh(8)
-out = {}
 SKIN = 0.05
 cfg = suggest_config(n, box, 8, 0.6, nbr_capacity=64, slack=2.5, skin=SKIN,
                      coords=ch)
@@ -47,26 +34,10 @@ chk = make_displacement_check_fn(cfg, mesh, box, n)
 st = asm(coords, types)
 out["asm_overflow"] = int(st.overflow)
 
-# fused per-step path == fresh assemble+evaluate, bitwise
-ffn = make_distributed_force_fn(model, cfg, mesh, box, n)
-e0, f0, _ = ev(params, coords, st)
-e1, f1, _ = ffn(params, coords, types)
-out["fused_eval_bitwise"] = bool((f0 == f1).all()) and float(e0) == float(e1)
-
 # tiny in-bound drift, atoms near selection-critical boundaries frozen so
 # the local/ghost sets cannot flip: reuse must be bitwise-equal to a fresh
 # assembly (the within-cutoff pair set is canonicalized by compaction)
-halo_eff = cfg.halo_eff
-crit = np.concatenate([(np.array([0.0, L / 2]) + d) % L
-                       for d in (0.0, halo_eff, -halo_eff)])
-frozen = np.zeros(n, bool)
-for a in range(3):
-    d = np.abs(ch[:, a][:, None] - crit[None, :])
-    d = np.minimum(d, L - d)
-    frozen |= (d < 1e-3).any(1)
-step = rng.uniform(-2e-4, 2e-4, (n, 3))
-step[frozen] = 0.0
-c1 = jnp.asarray(np.mod(ch + step, box).astype(np.float32))
+c1 = frozen_drift(halo_eff=cfg.halo_eff)
 e2, f2, d2 = ev(params, c1, st)             # stale state
 e3, f3, _ = ev(params, c1, asm(c1, types))  # fresh state
 out["reuse_bitwise"] = bool((f2 == f3).all()) and float(e2) == float(e3)
@@ -169,9 +140,7 @@ print("JSON" + json.dumps(out))
 
 @pytest.fixture(scope="module")
 def reuse_results():
-    stdout = run_in_subprocess(_DD_REUSE_CODE, n_devices=8)
-    line = [l for l in stdout.splitlines() if l.startswith("JSON")][0]
-    return json.loads(line[4:])
+    return run_json(_DD_REUSE_CODE, n_devices=8)
 
 
 def test_reuse_bitwise_parity(reuse_results):
@@ -203,10 +172,6 @@ def test_rebuild_triggered_and_correct(reuse_results):
     assert r["rebuilt_df_single"] < 1e-4
 
 
-def test_fused_path_is_assemble_plus_evaluate(reuse_results):
-    assert reuse_results["fused_eval_bitwise"]
-
-
 @pytest.mark.parametrize("mode", ["all_reduce", "reduce_scatter"])
 def test_padding_non_divisible_mesh(reuse_results, mode):
     """n_atoms % n_ranks != 0 works in both reduce modes (the
@@ -223,9 +188,7 @@ def test_engine_scan_with_stateful_distributed_provider():
     """Full integration: the engine's fused scan windows driving the
     stateful (skin > 0) distributed provider on an 8-rank mesh reproduce
     the per-step host loop."""
-    stdout = run_in_subprocess(_ENGINE_DD_CODE, n_devices=8)
-    line = [l for l in stdout.splitlines() if l.startswith("JSON")][0]
-    r = json.loads(line[4:])
+    r = run_json(_ENGINE_DD_CODE, n_devices=8)
     assert r["finite"]
     assert r["steps"] == [8, 8]
     assert r["max_dx"] <= 1e-6, r

@@ -9,19 +9,18 @@
 * (slow) the EnsembleEngine driving the batched distributed provider
   reproduces independent MDEngine runs with the same per-replica dd layout.
 
+(The batched fused-vs-split bitwise block now lives in
+``test_pipeline.py``; this suite keeps exercising the legacy
+``make_batched_*`` shims on purpose.)
+
 Multi-device execution requires forced host devices, so these run in a
 subprocess (tests proper must see one device).
 """
-import json
-
 import pytest
 
-from conftest import run_in_subprocess
+from parity_support import SYSTEM_PRELUDE, run_json
 
-_BATCHED_DD_CODE = r"""
-import json
-import jax, jax.numpy as jnp, numpy as np
-from repro.dp import DPModel, paper_dpa1_config
+_BATCHED_DD_CODE = SYSTEM_PRELUDE + r"""
 from repro.core import (suggest_config, make_distributed_force_fn,
                         make_batched_force_fn, make_batched_assembly_fn,
                         make_batched_evaluation_fn, make_batched_check_fn,
@@ -29,14 +28,8 @@ from repro.core import (suggest_config, make_distributed_force_fn,
 from repro.ensemble import make_ensemble_mesh
 from repro.launch.mesh import make_dd_mesh
 
-rng = np.random.default_rng(7)
-n, L, R = 160, 3.5, 2
-box = np.array([L] * 3, np.float32)
+R = 2
 coords = jnp.asarray(rng.uniform(0, L, (R, n, 3)).astype(np.float32))
-types = jnp.asarray(rng.integers(0, 4, n), jnp.int32)
-model = DPModel(paper_dpa1_config(ntypes=4, rcut=0.6, sel=48))
-params = model.init_params(jax.random.PRNGKey(0))
-out = {}
 
 # replica-parallel: (replica=2, dd=4) vs the single-domain oracle
 mesh24 = make_ensemble_mesh(2, 4)
@@ -77,9 +70,6 @@ st = asm(coords, types)
 out["asm_overflow"] = np.asarray(st.overflow).tolist()
 _, f0, d0 = ev(params, coords, st)
 out["fresh_needs_rebuild"] = np.asarray(d0["needs_rebuild"]).tolist()
-fb = make_batched_force_fn(model, cfgS, mesh24, box, n, R)(
-    params, coords, types)[1]
-out["eval_bitwise_fused"] = bool((f0 == fb).all())
 # replica 1 drifts beyond skin/2; replica 0 stays put
 c1 = jnp.mod(coords.at[1].add(jnp.asarray(
     rng.normal(0, 0.08, (n, 3)).astype(np.float32))), jnp.asarray(box))
@@ -140,9 +130,7 @@ print("JSON" + json.dumps(out))
 
 @pytest.fixture(scope="module")
 def batched_dd_results():
-    stdout = run_in_subprocess(_BATCHED_DD_CODE, n_devices=8)
-    line = [l for l in stdout.splitlines() if l.startswith("JSON")][0]
-    return json.loads(line[4:])
+    return run_json(_BATCHED_DD_CODE, n_devices=8)
 
 
 def test_batched_matches_single_domain(batched_dd_results):
@@ -161,7 +149,6 @@ def test_batched_assembly_evaluation_split(batched_dd_results):
     r = batched_dd_results
     assert r["asm_overflow"] == [0, 0]
     assert r["fresh_needs_rebuild"] == [False, False]
-    assert r["eval_bitwise_fused"]
 
 
 def test_per_replica_rebuild_flags(batched_dd_results):
@@ -175,9 +162,7 @@ def test_per_replica_rebuild_flags(batched_dd_results):
 def test_ensemble_engine_with_distributed_provider():
     """Full integration: EnsembleEngine + batched distributed provider on a
     (2, 4) mesh reproduces two independent dd-4 MDEngine runs."""
-    stdout = run_in_subprocess(_ENGINE_ENSEMBLE_DD_CODE, n_devices=8)
-    line = [l for l in stdout.splitlines() if l.startswith("JSON")][0]
-    r = json.loads(line[4:])
+    r = run_json(_ENGINE_ENSEMBLE_DD_CODE, n_devices=8)
     assert r["finite"]
     assert r["steps"] == [6, 6]
     assert all(d <= 1e-5 for d in r["max_dx"]), r

@@ -215,6 +215,26 @@ def test_timings_reset_per_run_and_reset_api(small_md):
     assert eng.tracer.events == []
 
 
+def test_step_counters_cleared_between_runs(small_md):
+    """Regression (satellite): back-to-back run() calls must not leak the
+    first run's per-step device-counter records into the second trace.
+    Restarting from a fresh state would otherwise duplicate absolute step
+    numbers; continuing the same trajectory would mix two runs' counters."""
+    system, pos, provider = small_md
+    eng = MDEngine(system, EngineConfig(**_CFG),
+                   special_force=provider(), obs=ObsConfig(enabled=True))
+    eng.run(eng.init_state(pos, 200.0), 6)
+    assert len([e for e in eng.tracer.events if e["type"] == "step"]) == 6
+    # restart from step 0: without clearing, steps 0..5 would appear twice
+    eng.run(eng.init_state(pos, 200.0), 4)
+    steps = [e["step"] for e in eng.tracer.events if e["type"] == "step"]
+    assert steps == list(range(4))
+    # spans/meta survive the per-run clear (two run meta events recorded)
+    metas = [e for e in eng.tracer.events
+             if e["type"] == "meta" and e.get("kind") == "run"]
+    assert len(metas) == 2
+
+
 # -- dd counters under scan windows and the ensemble driver (8 ranks) -------
 
 _DD_OBS_CODE = r"""
