@@ -1,0 +1,155 @@
+#!/usr/bin/env python
+"""Chaos smoke: guarded 8-rank MD under a deterministic fault plan.
+
+Forces 8 host devices and runs the solvated-protein trajectory with the
+distributed Deep-Potential provider twice: once clean, once under a
+``FaultPlan`` that (a) poisons rank 3's force contribution with NaNs in the
+middle of a fused scan window and (b) truncates a just-written checkpoint
+shard.  The guarded run must:
+
+* trip the in-scan health guard, roll back to the window start and replay
+  fault-free — the final state must equal the clean run **bitwise**;
+* detect the truncated checkpoint via per-leaf CRC32 and fall back to the
+  newest verified step on ``restore_latest``.
+
+A JSON report (trip/rollback/recovery counters, parity verdicts, fault
+summary) is written to ``--outdir`` and uploaded as a CI artifact by the
+``chaos-smoke`` job — the robustness analogue of ``trace_smoke.py``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import warnings
+
+# 8 simulated dd ranks — must be set before jax initializes
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+N_RANKS = 8
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default=os.path.join("experiments", "chaos"))
+    ap.add_argument("--name", default="chaos_8rank_report")
+    ap.add_argument("--steps", type=int, default=12)
+    ap.add_argument("--fault-step", type=int, default=5)
+    ap.add_argument("--fault-rank", type=int, default=3)
+    args = ap.parse_args(argv)
+
+    import jax
+    import numpy as np
+
+    from repro.ckpt import AsyncCheckpointer
+    from repro.core import DeepmdForceProvider, suggest_config
+    from repro.dp import DPModel, paper_dpa1_config
+    from repro.health import FaultPlan, FaultSpec, GuardConfig
+    from repro.launch.mesh import make_dd_mesh
+    from repro.md import (EngineConfig, MDEngine, build_solvated_protein,
+                          mark_nn_group)
+    from repro.obs import get_registry
+
+    assert len(jax.devices()) >= N_RANKS, (
+        f"need {N_RANKS} devices, got {len(jax.devices())} — XLA_FLAGS was "
+        "set after jax initialized?")
+
+    system, pos, nn_idx = build_solvated_protein(6, water_per_protein_atom=1.5)
+    system = mark_nn_group(system, nn_idx)
+    model = DPModel(paper_dpa1_config(ntypes=4, rcut=0.6, sel=32))
+    params = model.init_params(jax.random.PRNGKey(0))
+    mesh = make_dd_mesh(N_RANKS)
+    dd = suggest_config(len(nn_idx), np.asarray(system.box), N_RANKS, 0.6,
+                        nbr_capacity=48, slack=2.5, skin=0.04,
+                        force_mode="ghost_reduce",
+                        coords=np.asarray(pos)[np.asarray(nn_idx)])
+    cfg = dict(cutoff=0.9, neighbor_capacity=96, dt=0.0005,
+               thermostat_t=200.0)
+
+    def provider(hook=None):
+        return DeepmdForceProvider(model, params, nn_idx, system.types,
+                                   system.box, system.n_atoms, dd_config=dd,
+                                   mesh=mesh, fault_hook=hook)
+
+    # -- clean reference run -----------------------------------------------
+    # same checkpoint cadence as the chaos run (checkpoint boundaries are
+    # clean neighbor-rebuild points, so cadence is part of the trajectory)
+    os.makedirs(args.outdir, exist_ok=True)
+    print(f"clean reference: {args.steps} steps on {N_RANKS} ranks ...")
+    ref_ck = AsyncCheckpointer(os.path.join(args.outdir, "ref_ckpt"), keep=2)
+    ref_eng = MDEngine(system, EngineConfig(checkpoint_every=4, **cfg),
+                       special_force=provider(), checkpointer=ref_ck)
+    ref = ref_eng.run(ref_eng.init_state(pos, 200.0, seed=1), args.steps)
+    ref_ck.wait()
+
+    # -- guarded chaos run -------------------------------------------------
+    # the LAST checkpoint save is truncated, so restore_latest must walk
+    # past it to the newest verified step
+    n_saves = args.steps // 4
+    plan = FaultPlan([
+        FaultSpec("nan_force", step=args.fault_step, rank=args.fault_rank),
+        FaultSpec("truncate_ckpt", nth=n_saves),
+    ])
+    ckroot = os.path.join(args.outdir, "chaos_ckpt")
+    ck = AsyncCheckpointer(ckroot, keep=5, fault_plan=plan)
+    eng = MDEngine(system, EngineConfig(checkpoint_every=4, **cfg),
+                   special_force=provider(hook=plan.pipeline_hook()),
+                   guard=GuardConfig(enabled=True), faults=plan,
+                   checkpointer=ck)
+    print(f"chaos run: NaN forces on rank {args.fault_rank} at step "
+          f"{args.fault_step}, truncated checkpoint on save #{n_saves} ...")
+    out = eng.run(eng.init_state(pos, 200.0, seed=1), args.steps)
+    ck.wait()
+
+    # -- verdicts ----------------------------------------------------------
+    bitwise = bool(
+        (np.asarray(ref.positions) == np.asarray(out.positions)).all()
+        and (np.asarray(ref.velocities) == np.asarray(out.velocities)).all())
+    nan_spec, ckpt_spec = plan.faults
+    assert nan_spec.fired, "NaN fault never reached the force seam"
+    assert ckpt_spec.fired, "checkpoint truncation never fired"
+    assert eng.diagnostics["guard_trips"] >= 1, "guard never tripped"
+    assert eng.diagnostics["guard_rollbacks"] >= 1, "no rollback happened"
+    assert bitwise, "recovered trajectory diverged from the clean run"
+    assert np.isfinite(np.asarray(out.positions)).all()
+
+    # the save #2 shard was truncated on disk: CRC verification must skip
+    # it and fall back to the newest verified step
+    with warnings.catch_warnings(record=True) as wlog:
+        warnings.simplefilter("always")
+        tree, cstep = ck.restore_latest()
+    assert tree is not None and cstep >= 0, "no verified checkpoint survived"
+    skipped = [str(w.message) for w in wlog if "corrupt" in str(w.message)]
+    assert skipped, "restore_latest never hit the truncated checkpoint"
+    print(f"restore_latest fell back to verified step {cstep} "
+          f"(skipped: {len(skipped)} corrupt)")
+
+    reg = get_registry().snapshot()["counters"]
+    report = {
+        "n_ranks": N_RANKS, "steps": args.steps,
+        "fault_plan": plan.summary(),
+        "guard_trips": eng.diagnostics["guard_trips"],
+        "guard_rollbacks": eng.diagnostics["guard_rollbacks"],
+        "window_reruns": eng.diagnostics["window_reruns"],
+        "checkpoint_restores": eng.diagnostics["checkpoint_restores"],
+        "restore_fallback_step": int(cstep),
+        "corrupt_checkpoints_skipped": len(skipped),
+        "bitwise_parity": bitwise,
+        "counters": {k: v for k, v in reg.items()
+                     if k.startswith(("guard.", "serve."))},
+    }
+    path = os.path.join(args.outdir, args.name + ".json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"\nwrote {path}")
+    print(json.dumps(report, indent=2))
+    print("\nchaos smoke OK: injected NaN recovered bitwise, corrupt "
+          "checkpoint skipped")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

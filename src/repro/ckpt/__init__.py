@@ -1,2 +1,2 @@
-from .checkpoint import (AsyncCheckpointer, load_pytree, save_pytree,  # noqa: F401
-                         latest_step_dir)
+from .checkpoint import (AsyncCheckpointer, CheckpointCorrupt,  # noqa: F401
+                         latest_step_dir, load_pytree, save_pytree)

@@ -14,6 +14,12 @@ Design (multi-host aware, CPU-validated):
     changes between runs are therefore transparent (checkpoint/restart is
     the fault-tolerance story; see launch/elastic.py for the rank-failure
     protocol).
+  * Integrity: the manifest stores a per-leaf CRC32 (format 2);
+    ``load_pytree`` verifies on read and raises :class:`CheckpointCorrupt`
+    on any mismatch, truncation or unreadable shard.  Format-1 checkpoints
+    (no CRCs) still load.  ``AsyncCheckpointer.restore_latest`` walks step
+    dirs newest-first and falls back past corrupt ones to the newest
+    *verified* checkpoint.
 """
 from __future__ import annotations
 
@@ -22,11 +28,18 @@ import os
 import shutil
 import threading
 import time
+import warnings
+import zlib
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+class CheckpointCorrupt(RuntimeError):
+    """A checkpoint failed integrity verification (bad CRC, truncated or
+    unreadable shard, missing manifest, leaf-count mismatch)."""
 
 
 def _flatten_with_paths(tree):
@@ -42,10 +55,13 @@ def save_pytree(path: str, tree: Any, step: Optional[int] = None) -> None:
     os.makedirs(tmp, exist_ok=True)
     keys, vals, treedef = _flatten_with_paths(tree)
     arrays = {}
-    meta = {"keys": keys, "step": step, "treedef": str(treedef),
-            "time": time.time(), "format": 1}
+    crcs = []
     for i, v in enumerate(vals):
-        arrays[f"a{i}"] = np.asarray(v)
+        a = np.asarray(v)
+        arrays[f"a{i}"] = a
+        crcs.append(zlib.crc32(np.ascontiguousarray(a).tobytes()))
+    meta = {"keys": keys, "step": step, "treedef": str(treedef),
+            "time": time.time(), "format": 2, "crc32": crcs}
     np.savez(os.path.join(tmp, "shard_host0.npz"), **arrays)
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(meta, f)
@@ -57,10 +73,29 @@ def save_pytree(path: str, tree: Any, step: Optional[int] = None) -> None:
 def load_pytree(path: str, like: Any = None) -> Any:
     """Load a checkpoint; if ``like`` is given, restore into its treedef and
     (when leaves carry shardings) device_put onto them — the elastic path."""
-    with open(os.path.join(path, "manifest.json")) as f:
-        meta = json.load(f)
-    data = np.load(os.path.join(path, "shard_host0.npz"))
-    vals = [data[f"a{i}"] for i in range(len(meta["keys"]))]
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            meta = json.load(f)
+        data = np.load(os.path.join(path, "shard_host0.npz"))
+        # npz members are CRC-checked by zipfile on extraction, so a
+        # truncated shard raises here rather than yielding garbage
+        vals = [data[f"a{i}"] for i in range(len(meta["keys"]))]
+    except CheckpointCorrupt:
+        raise
+    except Exception as e:
+        raise CheckpointCorrupt(f"unreadable checkpoint {path}: {e}") from e
+    crcs = meta.get("crc32")
+    if crcs is not None:                     # format >= 2
+        if len(crcs) != len(vals):
+            raise CheckpointCorrupt(
+                f"{path}: manifest lists {len(crcs)} CRCs for "
+                f"{len(vals)} leaves")
+        for i, (v, want) in enumerate(zip(vals, crcs)):
+            got = zlib.crc32(np.ascontiguousarray(v).tobytes())
+            if got != want:
+                raise CheckpointCorrupt(
+                    f"{path}: CRC mismatch on leaf {meta['keys'][i]!r} "
+                    f"(stored {want:#010x}, computed {got:#010x})")
     if like is None:
         # reconstruct a nested dict from the recorded key paths
         out: dict = {}
@@ -107,9 +142,12 @@ class AsyncCheckpointer:
     copy), serialize+write off the critical path.  ``wait()`` joins before
     the next save or at shutdown so at most one write is in flight."""
 
-    def __init__(self, root: str, keep: int = 3):
+    def __init__(self, root: str, keep: int = 3, fault_plan=None):
         self.root = root
         self.keep = keep
+        # health.FaultPlan seam: lets tests/chaos runs truncate a just-
+        # written shard deterministically (exercises CRC + fallback)
+        self.fault_plan = fault_plan
         self._thread: Optional[threading.Thread] = None
         os.makedirs(root, exist_ok=True)
 
@@ -120,6 +158,8 @@ class AsyncCheckpointer:
 
         def work():
             save_pytree(path, host_tree, step)
+            if self.fault_plan is not None:
+                self.fault_plan.after_checkpoint_save(path, step)
             self._gc()
 
         # non-daemon: an interpreter exit (including SystemExit from failure
@@ -134,13 +174,27 @@ class AsyncCheckpointer:
             self._thread = None
 
     def restore_latest(self, like: Any = None):
+        """Restore the newest *verified* checkpoint: step dirs are tried
+        newest-first and corrupt/truncated ones (CheckpointCorrupt) are
+        skipped with a warning, falling back to the next-newest.  Returns
+        ``(None, -1)`` when no verified checkpoint exists."""
         self.wait()
-        path = latest_step_dir(self.root)
-        if path is None:
+        if not os.path.isdir(self.root):
             return None, -1
-        with open(os.path.join(path, "manifest.json")) as f:
-            step = json.load(f).get("step", -1)
-        return load_pytree(path, like), step
+        steps = sorted(_complete_step_dirs(self.root),
+                       key=lambda d: int(d.split("_")[1]), reverse=True)
+        for d in steps:
+            path = os.path.join(self.root, d)
+            try:
+                tree = load_pytree(path, like)
+                with open(os.path.join(path, "manifest.json")) as f:
+                    step = json.load(f).get("step", -1)
+            except CheckpointCorrupt as e:
+                warnings.warn(f"skipping corrupt checkpoint: {e}",
+                              stacklevel=2)
+                continue
+            return tree, step
+        return None, -1
 
     def _gc(self) -> None:
         steps = sorted(_complete_step_dirs(self.root))

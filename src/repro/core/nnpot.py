@@ -50,7 +50,7 @@ from .pipeline import ForcePipeline
 # repro.obs.trace): everything the Fig. 12 / imbalance reports consume
 _COUNTER_KEYS = ("local_count", "ghost_count", "cost_max", "cost_ratio",
                  "rank_cost", "nbr_occupancy", "rank_occupancy", "max_disp2",
-                 "interior_frac")
+                 "interior_frac", "rank_nonfinite")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,7 +116,8 @@ class DeepmdForceProvider:
                  dd_config: Optional[DDConfig] = None,
                  mesh: Optional[Mesh] = None,
                  units: UnitConversion = UnitConversion(),
-                 nbr_capacity: int = 64, skin: float = 0.0):
+                 nbr_capacity: int = 64, skin: float = 0.0,
+                 fault_hook=None):
         self.model = model
         self.params = params
         self.nn_indices = jnp.asarray(np.asarray(nn_indices, np.int32))
@@ -130,6 +131,9 @@ class DeepmdForceProvider:
         self.nn_types = nn_types
         self.dd_config = dd_config
         self.mesh = mesh
+        # health.FaultPlan.pipeline_hook seam, threaded into every
+        # ForcePipeline this provider (re)builds
+        self.fault_hook = fault_hook
         if dd_config is not None:
             assert mesh is not None, "distributed mode needs a mesh"
             self.skin = dd_config.skin
@@ -154,7 +158,8 @@ class DeepmdForceProvider:
         if self.dd_config is not None:
             self.pipeline = ForcePipeline(self.model, self.dd_config,
                                           self.mesh, self.box_model,
-                                          self.n_nn)
+                                          self.n_nn,
+                                          fault_hook=self.fault_hook)
             self._dist_fn = self.pipeline.build_force_fn()
             self._asm_fn = self.pipeline.build_assembly_fn()
             self._eval_fn = self.pipeline.build_evaluation_fn()

@@ -516,10 +516,12 @@ class ForcePipeline:
 
     def __init__(self, model: Optional[DPModel], cfg: DDConfig, mesh: Mesh,
                  box, n_atoms: int, *, n_replicas: int = 0,
-                 replica_axis: str = "replica"):
+                 replica_axis: str = "replica", fault_hook=None):
         cfg.validate(box)
+        self._r_local = 0            # replicas per device group (0 unbatched)
         if n_replicas:
-            _replica_layout(mesh, cfg, n_replicas, replica_axis)
+            self._r_local = _replica_layout(mesh, cfg, n_replicas,
+                                            replica_axis)
             self.ax = _AxisOps(cfg.axis, replica_axis)
         else:
             if cfg.axis not in mesh.shape:
@@ -542,6 +544,9 @@ class ForcePipeline:
         # model=None builds a check-only pipeline (build_check_fn needs no
         # cutoff); every other builder requires the model
         self.rcut = model.cfg.descriptor.rcut if model is not None else 0.0
+        # health.FaultPlan.pipeline_hook seam: read at trace time, so a
+        # hook with no armed faults traces the identity (see _post_eval)
+        self.fault_hook = fault_hook
         self.stages = self._fused_stages()
 
     def _require_model(self, builder: str) -> None:
@@ -577,6 +582,8 @@ class ForcePipeline:
 
             (ctx["e_local"], ctx["f_global"], ctx["trim_ovf"],
              ctx["stats"]) = ax.vmap(one)(ctx["coords_all"], ctx["st"])
+            ctx["e_local"], ctx["f_global"] = self._post_eval(
+                ctx["e_local"], ctx["f_global"])
 
         def reduce(ctx):
             st = ctx["st"]
@@ -589,6 +596,7 @@ class ForcePipeline:
                     "ghost_count": ax.psum(g_count),
                     "cost_max": cost_max,
                     "rank_cost": ax.gather_ranks(l_count + g_count),
+                    "rank_nonfinite": self._rank_nonfinite(ctx["f_global"]),
                     **self._occupancy_diag(ctx["stats"]),
                     "overflow": ax.psum(ovf.astype(jnp.int32))}
             diag["cost_ratio"] = (
@@ -617,6 +625,29 @@ class ForcePipeline:
                   ("energy", "forces", "diag"), reduce),
         )
 
+    def _post_eval(self, e_local, f_global):
+        """Fault-injection seam on the pre-reduce per-rank results.
+
+        The hook (``health.FaultPlan.pipeline_hook``) poisons a target
+        rank's force contribution *before* the force collective, so the
+        failure propagates the way a real blown rank's would.  Its
+        armed/unfired spec set is read at trace time: with nothing armed
+        the hook returns its inputs and the traced program is unchanged."""
+        if self.fault_hook is None:
+            return e_local, f_global
+        ax = self.ax
+        rank = jax.lax.axis_index(self.cfg.axis)
+        rep0 = (jax.lax.axis_index(ax.replica_axis) * self._r_local
+                if ax.batched else 0)
+        return self.fault_hook(rank, rep0, e_local, f_global)
+
+    def _rank_nonfinite(self, f_global):
+        """Per-rank count of non-finite entries in the pre-reduce force
+        scatter — the per-rank attribution signal for blown evaluations
+        (trailing rank axis, like ``rank_cost``)."""
+        bad = (~jnp.isfinite(f_global)).sum((-2, -1)).astype(jnp.int32)
+        return self.ax.gather_ranks(bad)
+
     def _reduce_forces(self, e_local, f_global):
         ax, cfg = self.ax, self.cfg
         energy = ax.psum(e_local)
@@ -641,6 +672,7 @@ class ForcePipeline:
         specs = {k: ax.rspec() for k in keys}
         specs["rank_cost"] = ax.rspec(None)
         specs["rank_occupancy"] = ax.rspec(None)
+        specs["rank_nonfinite"] = ax.rspec(None)
         return specs
 
     def _force_out_spec(self) -> P:
@@ -749,10 +781,11 @@ class ForcePipeline:
 
                 e_local, f_global, trim_ovf, stats = ax.vmap(one)(
                     coords_all, st.ref, st_d)
+            e_local, f_global = self._post_eval(e_local, f_global)
             with jax.named_scope("obs.force_reduce"):
                 energy, forces = self._reduce_forces(e_local, f_global)
             disp2 = self._disp2(coords_shard, st.ref, rank)
-            diag = self._eval_diag(st, trim_ovf, stats, disp2)
+            diag = self._eval_diag(st, trim_ovf, stats, disp2, f_global)
             return energy, forces, diag
 
         return self._finish_evaluation(per_rank)
@@ -790,10 +823,11 @@ class ForcePipeline:
                 e_local, f_global, trim_ovf, stats, n_int = ax.vmap(one)(
                     coords_all, st.ref, st_d, e_a, f_a,
                     gfree, interior, deep, deep2)
+            e_local, f_global = self._post_eval(e_local, f_global)
             with jax.named_scope("obs.force_reduce"):
                 energy, forces = self._reduce_forces(e_local, f_global)
             disp2 = self._disp2(coords_shard, st.ref, rank)
-            diag = self._eval_diag(st, trim_ovf, stats, disp2)
+            diag = self._eval_diag(st, trim_ovf, stats, disp2, f_global)
             n_loc = st_d["l_mask"].sum(-1).astype(jnp.int32)
             diag["interior_frac"] = (
                 ax.psum(n_int.astype(jnp.int32)).astype(jnp.float32)
@@ -812,7 +846,8 @@ class ForcePipeline:
             lambda c, r: max_displacement2(c, r, box))(coords_shard,
                                                        ref_shard))
 
-    def _eval_diag(self, st: DDState, trim_ovf, stats, disp2) -> dict:
+    def _eval_diag(self, st: DDState, trim_ovf, stats, disp2,
+                   f_global) -> dict:
         ax, cfg = self.ax, self.cfg
         overflow = st.overflow + ax.psum(trim_ovf.astype(jnp.int32))
         total = st.local_count + st.ghost_count
@@ -824,6 +859,7 @@ class ForcePipeline:
         return {"local_count": st.local_count, "ghost_count": st.ghost_count,
                 "overflow": overflow, "max_disp2": disp2,
                 "cost_max": st.cost_max, "rank_cost": rank_cost,
+                "rank_nonfinite": self._rank_nonfinite(f_global),
                 **self._occupancy_diag(stats),
                 # max/mean per-rank Eq.-8 cost: the load-imbalance figure the
                 # rebalance knob is meant to push toward 1.0

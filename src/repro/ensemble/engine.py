@@ -78,7 +78,7 @@ class EnsembleEngine(MDEngine):
     def __init__(self, system: System, config: EngineConfig,
                  ens: EnsembleConfig,
                  special_force: Optional[ForceProvider] = None,
-                 obs=None):
+                 obs=None, guard=None, faults=None, checkpointer=None):
         r = ens.n_replicas
         if r < 1:
             raise ValueError("n_replicas must be >= 1")
@@ -100,7 +100,8 @@ class EnsembleEngine(MDEngine):
             jnp.float32)
         self._batch_shape = (r,)
         self._extra_boundary_every = ens.exchange_interval
-        super().__init__(system, config, special_force, obs=obs)
+        super().__init__(system, config, special_force, obs=obs,
+                         guard=guard, faults=faults, checkpointer=checkpointer)
         self._exchange_fn = make_exchange_fn(self._temp_table)
 
     def _init_diagnostics(self) -> dict:
@@ -111,6 +112,9 @@ class EnsembleEngine(MDEngine):
             "exchange_attempts": 0, "exchange_accepts": 0,
             "pair_attempts": np.zeros(max(r - 1, 0), np.int64),
             "pair_accepts": np.zeros(max(r - 1, 0), np.int64),
+            # per-replica guard-trip attribution (recovery is masked per
+            # replica: untripped replicas keep the committed window)
+            "replica_guard_trips": np.zeros(r, np.int64),
         })
         return d
 
@@ -207,6 +211,13 @@ class EnsembleEngine(MDEngine):
         }
 
     # -- fault tolerance ---------------------------------------------------
+
+    def _note_guard_trips(self, mask) -> None:
+        self.diagnostics["replica_guard_trips"] += np.asarray(mask,
+                                                              np.int64)
+
+    def _state_from_tree(self, tree) -> ReplicaState:
+        return ReplicaState(**{k: jnp.asarray(v) for k, v in tree.items()})
 
     @staticmethod
     def restore(path: str) -> ReplicaState:

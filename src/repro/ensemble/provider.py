@@ -47,12 +47,14 @@ class BatchedDeepmdProvider(DeepmdForceProvider):
                  mesh: Optional[Mesh] = None,
                  replica_axis: str = "replica",
                  units: UnitConversion = UnitConversion(),
-                 nbr_capacity: int = 64, skin: float = 0.0):
+                 nbr_capacity: int = 64, skin: float = 0.0,
+                 fault_hook=None):
         self.n_replicas = n_replicas
         self.replica_axis = replica_axis
         super().__init__(model, params, nn_indices, types, box, n_atoms,
                          dd_config=dd_config, mesh=mesh, units=units,
-                         nbr_capacity=nbr_capacity, skin=skin)
+                         nbr_capacity=nbr_capacity, skin=skin,
+                         fault_hook=fault_hook)
 
     def backend_build_fns(self) -> None:
         # the replica-batched drivers are the SAME pipeline with the batching
@@ -61,7 +63,8 @@ class BatchedDeepmdProvider(DeepmdForceProvider):
             self.pipeline = ForcePipeline(
                 self.model, self.dd_config, self.mesh, self.box_model,
                 self.n_nn, n_replicas=self.n_replicas,
-                replica_axis=self.replica_axis)
+                replica_axis=self.replica_axis,
+                fault_hook=self.fault_hook)
             self._dist_fn = self.pipeline.build_force_fn()
             self._asm_fn = self.pipeline.build_assembly_fn()
             self._eval_fn = self.pipeline.build_evaluation_fn()

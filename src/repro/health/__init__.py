@@ -1,0 +1,21 @@
+"""Guarded execution: in-scan health monitors, unified rollback-and-replay
+recovery, and deterministic fault injection.
+
+The layer spans the jitted hot path (``GuardConfig`` checks compiled into
+the engine's fused windows), the engines (``WindowVerdict`` →
+``RECOVERY_POLICY`` dispatch with rollback-and-replay), checkpointing
+(emergency dumps, CRC-verified restore fallback) and serving (retry with
+backoff, injected executor failures).  ``FaultPlan`` drives every recovery
+path deterministically in tests and ``scripts/chaos_smoke.py``.
+"""
+from .faults import FAULT_KINDS, FaultPlan, FaultSpec, InjectedFault
+from .guards import GuardConfig, step_guard_trip
+from .recovery import GuardTripError, dump_emergency
+from .verdict import RECOVERY_POLICY, VERDICT_KINDS, WindowVerdict
+
+__all__ = [
+    "FAULT_KINDS", "FaultPlan", "FaultSpec", "InjectedFault",
+    "GuardConfig", "step_guard_trip",
+    "GuardTripError", "dump_emergency",
+    "RECOVERY_POLICY", "VERDICT_KINDS", "WindowVerdict",
+]

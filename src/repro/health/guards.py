@@ -1,0 +1,87 @@
+"""In-scan health monitors: cheap device-side invariant checks.
+
+``GuardConfig`` mirrors ``repro.obs.ObsConfig``: off by default, and decided
+at engine construction so the enabled/disabled choice is baked into the
+jitted windows at trace time.  With ``enabled=False`` the engine's traced
+program is *unchanged* (no extra carry leaf, no checks) — the same
+bitwise-identity contract the observability layer keeps.
+
+With ``enabled=True`` the per-step check :func:`step_guard_trip` runs inside
+the fused ``lax.scan`` window (and the per-step host loop): its result is a
+per-trajectory boolean flag OR-reduced across the window and surfaced next
+to the existing ``nlist_overflow`` / ``sp_overflow`` window flags.  The
+checks are *outputs only* — nothing they compute feeds back into the
+physics, so an enabled-but-quiet run is bitwise-identical to an unguarded
+one (enforced by ``tests/test_health.py``).
+
+Recovery from a tripped flag is the engine's job (see the verdict → policy
+table in ``repro.health.verdict`` and ``MDEngine._run_segment_scan``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardConfig:
+    """Guarded-execution knobs (see README "Robustness & fault injection").
+
+    Thresholds are in engine units (nm, K, kJ/mol).  ``None`` disables the
+    individual check; ``enabled=False`` disables the whole guard layer and
+    keeps the traced program bitwise-identical to an unguarded engine.
+    """
+
+    enabled: bool = False
+    check_nonfinite: bool = True       # NaN/Inf in positions/velocities/forces
+    max_disp: Optional[float] = None   # per-step displacement bound (nm)
+    temp_ceiling: Optional[float] = None   # instantaneous temperature cap (K)
+    energy_jump: Optional[float] = None    # |E(t) - E(t-1)| bound (kJ/mol)
+    max_rollbacks: int = 3             # replays per window before escalating
+    dt_shrink: float = 0.5             # dt factor applied from the 2nd replay
+
+    def __post_init__(self):
+        if self.max_rollbacks < 1:
+            raise ValueError("max_rollbacks must be >= 1")
+        if not (0.0 < self.dt_shrink <= 1.0):
+            raise ValueError("dt_shrink must be in (0, 1]")
+
+
+def step_guard_trip(cfg: GuardConfig, prev_positions: jax.Array, state,
+                    masses: jax.Array, box: jax.Array,
+                    e_total: jax.Array, e_prev: jax.Array) -> jax.Array:
+    """Per-trajectory guard-trip flag for one integrated step.
+
+    ``state`` is the post-integration MD state, ``prev_positions`` the
+    pre-step positions (for the displacement bound, minimum-image so box
+    wrapping never looks like a jump), ``e_prev`` the previous step's total
+    potential energy (NaN on the window's first step — the energy-jump
+    comparison is then False, i.e. skipped).  Returns a bool array shaped
+    like the engine's ``_batch_shape`` (``()`` scalar, ``(R,)`` ensemble).
+
+    NaN propagation note: every threshold comparison (``NaN > thr`` etc.)
+    is False under IEEE semantics, so a non-finite state only trips through
+    ``check_nonfinite`` — keep it on unless a test needs it off.
+    """
+    trip = jnp.zeros(state.positions.shape[:-2], bool)
+    if cfg.check_nonfinite:
+        finite = (jnp.isfinite(state.positions).all((-1, -2))
+                  & jnp.isfinite(state.velocities).all((-1, -2))
+                  & jnp.isfinite(state.forces).all((-1, -2)))
+        trip = trip | ~finite
+    if cfg.max_disp is not None:
+        d = state.positions - prev_positions
+        d = d - jnp.round(d / box) * box       # minimum image
+        trip = trip | ((d ** 2).sum(-1).max(-1) > cfg.max_disp ** 2)
+    if cfg.temp_ceiling is not None:
+        from ..md.system import KB  # lazy: repro.md imports this package
+        ke = 0.5 * (masses[:, None] * state.velocities ** 2).sum((-1, -2))
+        ndof = state.positions.shape[-2] * 3 - 3
+        t_now = 2.0 * ke / (ndof * KB)
+        trip = trip | (t_now > cfg.temp_ceiling)
+    if cfg.energy_jump is not None:
+        trip = trip | (jnp.abs(e_total - e_prev) > cfg.energy_jump)
+    return trip

@@ -23,21 +23,33 @@ Two host-loop modes (``EngineConfig.loop_mode``):
     integrate stages timed separately — the paper-Fig.-9-style overhead
     decomposition (see ``benchmarks/fig9_overhead.py``).
 
-Mid-run capacity overflow no longer kills the trajectory: the engine
-rebuilds on the host with doubled capacity (re-jitting only on the rare
-growth event), re-runs the affected window from its saved start state, and
-surfaces the growth in ``MDEngine.diagnostics``.
+Mid-run failures no longer kill the trajectory.  Every window ends in a
+``repro.health.WindowVerdict`` dispatched through the ``RECOVERY_POLICY``
+table: capacity overflow keeps the grow-and-replay path (host rebuild with
+doubled capacity, re-jit, replay from the window's saved start state);
+numerical guard trips (``GuardConfig`` — NaN/Inf, displacement bound,
+temperature ceiling, energy jump, compiled into the scan when enabled) roll
+back to the window start — or the last verified ``AsyncCheckpointer`` step
+when the start itself is tainted — and replay, first at the original dt
+(transient-fault hypothesis: an injected one-shot fault replays bitwise
+fault-free) and then with a temporarily shrunk dt; exhausted recovery dumps
+an emergency checkpoint + diagnostics bundle before raising.  Deterministic
+fault injection (``repro.health.FaultPlan``) exercises each path.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Callable, Optional, Protocol
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..backend import ForceRequest
+from ..health import (GuardConfig, GuardTripError, WindowVerdict,
+                      dump_emergency, step_guard_trip)
 from ..obs import Tracer
 from . import observables
 from .forcefield import ForceFieldConfig, classical_energy
@@ -71,6 +83,7 @@ class EngineConfig:
     checkpoint_path: Optional[str] = None
     loop_mode: str = "scan"            # "scan" (fused windows) | "step"
     max_capacity_growths: int = 6      # doublings before giving up
+    emergency_path: Optional[str] = None  # unrecoverable-verdict dump root
     ff: ForceFieldConfig = dataclasses.field(default_factory=ForceFieldConfig)
 
 
@@ -97,7 +110,8 @@ class MDEngine:
 
     def __init__(self, system: System, config: EngineConfig,
                  special_force: Optional[ForceProvider] = None,
-                 obs=None):
+                 obs=None, guard: Optional[GuardConfig] = None,
+                 faults=None, checkpointer=None):
         self.system = system
         self.config = config
         self.special_force = special_force
@@ -105,6 +119,15 @@ class MDEngine:
         # wants_counters flag is baked into the jitted windows at trace
         # time, so decide observability at construction, not mid-run.
         self.tracer = Tracer.ensure(obs)
+        # guard/faults are likewise trace-time state: the guard-trip flag
+        # only enters the scan carry when guard.enabled, so a disabled
+        # guard traces a program identical to pre-guard engines (bitwise
+        # contract, enforced by tests/test_health.py)
+        self.guard = guard if guard is not None else GuardConfig()
+        self._guard_on = bool(self.guard.enabled)
+        self.faults = faults                 # Optional[health.FaultPlan]
+        self.checkpointer = checkpointer     # Optional[AsyncCheckpointer]
+        self._last_state = None              # for emergency dumps
         self._stateful = bool(getattr(special_force, "stateful", False))
         # host_side backends (ForceBackend capability flag, e.g. the serving
         # client) block on host round-trips and must not be fused into
@@ -135,7 +158,11 @@ class MDEngine:
                 "displacement_rebuilds": 0,
                 "special_rebuilds": 0,
                 "cadence_rebuilds": 0,
-                "window_reruns": 0}
+                "window_reruns": 0,
+                "guard_trips": 0,
+                "guard_rollbacks": 0,
+                "checkpoint_restores": 0,
+                "emergency_dumps": []}
 
     def reset(self) -> None:
         """Zero ``timings`` and ``diagnostics`` and clear the tracer's event
@@ -185,14 +212,20 @@ class MDEngine:
         self._integrate_fn = jax.jit(
             lambda state, f: self._integrate_one(state, f, cfg.thermostat_t))
 
-    def _step_parts(self, state: MDState, nlist: NeighborList, sp_state):
+    def _step_parts(self, state: MDState, nlist: NeighborList, sp_state,
+                    e_prev=None):
         """One step from already-valid lists: the shared scan/step core.
 
         Returns (new_state, nlist_out, sp_state_out, e_cl, e_sp, rb, sp_rb,
-        sp_ovf, rec) — ``rec`` is the per-step counter record for the
+        sp_ovf, trip, rec) — ``rec`` is the per-step counter record for the
         observability tracer (empty unless ``tracer.wants_counters``; XLA
-        dead-code-eliminates the counters whenever it stays empty).
-        Traceable: rebuilds inside are data-dependent ``lax.cond`` branches.
+        dead-code-eliminates the counters whenever it stays empty) and
+        ``trip`` the per-trajectory guard flag (None with the guard off —
+        the traced program is then unchanged).  ``e_prev`` is the previous
+        step's total potential energy for the energy-jump guard (only
+        passed when the guard is on).  Traceable: rebuilds inside are
+        data-dependent ``lax.cond`` branches, and injected faults gate on
+        ``state.step`` device-side.
         """
         cfg = self.config
         system = self.system
@@ -231,14 +264,24 @@ class MDEngine:
                 e_sp, f_sp = self._eval_special_stateless(state.positions,
                                                           system.box)
             f = f + f_sp
+        if self.faults is not None:
+            # exact-step injection seam; a fully fired plan contributes
+            # nothing and traces the unfaulted program
+            f, sp_ovf = self.faults.apply_engine(state.step, f, sp_ovf)
         new = self._integrate_fn(state, f)
+        trip = None
+        if self._guard_on:
+            trip = step_guard_trip(self.guard, state.positions, new,
+                                   system.masses, system.box,
+                                   e_cl + e_sp, e_prev)
         rec = {}
         if self.tracer.wants_counters:
             rec = {"e_classical": e_cl, "e_special": e_sp,
                    "rebuild": rb, "sp_rebuild": sp_rb,
                    "nlist_overflow": nlist.overflow, "sp_overflow": sp_ovf,
                    **sp_counters}
-        return new, nlist, sp_state, e_cl, e_sp, rb, sp_rb, sp_ovf, rec
+        return (new, nlist, sp_state, e_cl, e_sp, rb, sp_rb, sp_ovf, trip,
+                rec)
 
     def _check_rebuild(self, nlist: NeighborList, positions) -> jax.Array:
         """Displacement-triggered rebuild flag(s), shaped ``_batch_shape``."""
@@ -251,18 +294,24 @@ class MDEngine:
             return self._window_cache[k]
 
         def body(carry, _):
-            state, nlist, sp_state, flags, _, _ = carry
+            state, nlist, sp_state, flags, e_cl0, e_sp0 = carry
+            # previous step's total energy feeds the energy-jump guard;
+            # with the guard off nothing extra is computed or carried
+            e_prev = (e_cl0 + e_sp0) if self._guard_on else None
             (state, nlist, sp_state, e_cl, e_sp, rb, sp_rb,
-             sp_ovf, rec) = self._step_parts(state, nlist, sp_state)
-            flags = {
+             sp_ovf, trip, rec) = self._step_parts(state, nlist, sp_state,
+                                                   e_prev=e_prev)
+            out_flags = {
                 "rebuilds": flags["rebuilds"] + rb.astype(jnp.int32),
                 "sp_rebuilds": flags["sp_rebuilds"] + sp_rb.astype(jnp.int32),
                 "nlist_overflow": flags["nlist_overflow"] | nlist.overflow,
                 "sp_overflow": flags["sp_overflow"] | sp_ovf,
             }
+            if self._guard_on:
+                out_flags["guard_trip"] = flags["guard_trip"] | trip
             # the scan stacks rec along the step axis for free; with the
             # tracer off rec is {} and nothing is carried
-            return (state, nlist, sp_state, flags, e_cl, e_sp), rec
+            return (state, nlist, sp_state, out_flags, e_cl, e_sp), rec
 
         def run_window(state, nlist, sp_state):
             bs = self._batch_shape
@@ -271,7 +320,13 @@ class MDEngine:
                      "nlist_overflow": jnp.zeros(bs, bool),
                      "sp_overflow": jnp.zeros(bs, bool)}
             zero = jnp.zeros(bs)
-            carry = (state, nlist, sp_state, flags, zero, zero)
+            e0 = zero
+            if self._guard_on:
+                flags["guard_trip"] = jnp.zeros(bs, bool)
+                # NaN disables the first step's energy-jump comparison
+                # (IEEE: NaN > thr is False) without a first-step flag
+                e0 = jnp.full(bs, jnp.nan)
+            carry = (state, nlist, sp_state, flags, e0, zero)
             carry, recs = jax.lax.scan(body, carry, None, length=k)
             return carry, recs
 
@@ -302,9 +357,8 @@ class MDEngine:
     def _grow_neighbor_capacity(self) -> None:
         cfg = self.config
         if len(self.diagnostics["capacity_growths"]) >= cfg.max_capacity_growths:
-            raise RuntimeError(
-                "neighbor capacity still exceeded after "
-                f"{cfg.max_capacity_growths} doublings")
+            self._emergency("neighbor capacity still exceeded after "
+                            f"{cfg.max_capacity_growths} doublings")
         cfg.neighbor_capacity *= 2
         self._cell_cap_scale *= 2.0  # cell occupancy can be the overflow too
         self.diagnostics["capacity_growths"].append(cfg.neighbor_capacity)
@@ -329,8 +383,8 @@ class MDEngine:
             special.grow()
             self.diagnostics["special_growths"] += 1
             self._window_cache.clear()
-        raise RuntimeError("special-force capacity still exceeded after "
-                           f"{self.config.max_capacity_growths} doublings")
+        self._emergency("special-force capacity still exceeded after "
+                        f"{self.config.max_capacity_growths} doublings")
 
     # -- main loop ---------------------------------------------------------
 
@@ -349,51 +403,139 @@ class MDEngine:
             # observation happens after relative steps 1, 1+obs, 1+2*obs, ...
             ends.append(i + 1 if i % observe_every == 0
                         else ((i - 1) // observe_every + 1) * observe_every + 1)
-        if cfg.checkpoint_every and cfg.checkpoint_path:
+        if cfg.checkpoint_every and (cfg.checkpoint_path
+                                     or self.checkpointer is not None):
             # abs_step is the absolute step count at relative step i
             ce = cfg.checkpoint_every
             ends.append(i + (-abs_step - 1) % ce + 1)
         return max(1, min(e for e in ends if e > i) - i)
 
+    def _window_verdict(self, flags) -> WindowVerdict:
+        """Host-side verdict for one finished window's device flags.
+
+        Capacity overflow takes precedence over a guard trip: an overflowed
+        window computed truncated forces, so any trip it reports is judged
+        afresh on the grown replay."""
+        nlist_ovf = bool(jnp.any(flags["nlist_overflow"]))
+        sp_ovf = bool(jnp.any(flags["sp_overflow"]))
+        if nlist_ovf or sp_ovf:
+            return WindowVerdict("capacity_overflow",
+                                 detail={"nlist": nlist_ovf,
+                                         "special": sp_ovf})
+        trip = flags.get("guard_trip")
+        if trip is not None and bool(jnp.any(trip)):
+            return WindowVerdict("guard_trip", trip_mask=np.asarray(trip))
+        return WindowVerdict("ok")
+
     def _run_segment_scan(self, state, nlist, sp_state, k: int):
-        """One fused window, re-run from its start on capacity overflow."""
+        """One fused window, dispatched through the ``WindowVerdict`` →
+        ``RECOVERY_POLICY`` table: commit / grow-and-replay on capacity
+        overflow / rollback-and-replay on a guard trip (escalating to an
+        emergency dump when recovery is exhausted)."""
         tracer = self.tracer
         start = (state, nlist, sp_state)
-        step0 = self._abs_step(state) if tracer.wants_counters else 0
-        while True:
-            t0 = time.perf_counter()
-            with tracer.span("scan_window", phase="scan", steps=k):
-                (state, nlist, sp_state, flags, e_cl,
-                 e_sp), recs = self._window_fn(k)(*start)
-                jax.block_until_ready(state.positions)
-            self.timings["scan"] += time.perf_counter() - t0
-            nlist_ovf = bool(jnp.any(flags["nlist_overflow"]))
-            sp_ovf = bool(jnp.any(flags["sp_overflow"]))
-            if not nlist_ovf and not sp_ovf:
-                # batched engines count per-trajectory triggers (replica-steps)
-                self.diagnostics["displacement_rebuilds"] += int(
-                    jnp.sum(flags["rebuilds"]))
-                self.diagnostics["special_rebuilds"] += int(
-                    jnp.sum(flags["sp_rebuilds"]))
-                tracer.record_window(step0, k, recs)
-                return state, nlist, sp_state, e_cl, e_sp
-            # grow whichever capacity overflowed, restore the window's start
-            # state, and replay the window — correctness over throughput on
-            # the rare growth event
-            self.diagnostics["window_reruns"] += 1
-            state0, nlist0, sp_state0 = start
-            if nlist_ovf:
-                self._grow_neighbor_capacity()
-                nlist0 = self._build_nlist_grown(state0.positions)
-            if self._stateful and sp_ovf:
-                self.special_force.grow()
-                self.diagnostics["special_growths"] += 1
-                self._window_cache.clear()
-                sp_state0 = self._assemble_special_grown(state0.positions)
-            start = (state0, nlist0, sp_state0)
+        step0 = self._abs_step(state)
+        committed = None   # first tripped window's results, for masking
+        mask0 = None
+        rollbacks = 0
+        dt0 = self.config.dt
+        try:
+            while True:
+                t0 = time.perf_counter()
+                with tracer.span("scan_window", phase="scan", steps=k):
+                    (state, nlist, sp_state, flags, e_cl,
+                     e_sp), recs = self._window_fn(k)(*start)
+                    jax.block_until_ready(state.positions)
+                self.timings["scan"] += time.perf_counter() - t0
+                verdict = self._window_verdict(flags)
+                if verdict.policy == "commit":
+                    # batched engines count per-trajectory triggers
+                    # (replica-steps)
+                    self.diagnostics["displacement_rebuilds"] += int(
+                        jnp.sum(flags["rebuilds"]))
+                    self.diagnostics["special_rebuilds"] += int(
+                        jnp.sum(flags["sp_rebuilds"]))
+                    tracer.record_window(step0, k, recs)
+                    out = (state, nlist, sp_state, e_cl, e_sp)
+                    if committed is not None:
+                        # per-replica masking: untripped trajectories keep
+                        # the originally committed window, only tripped
+                        # ones take the replay
+                        out = self._merge_rollback(committed, out, mask0)
+                        tracer.registry.counter("guard.recoveries").inc()
+                    return out
+                self.diagnostics["window_reruns"] += 1
+                if verdict.policy == "grow_replay":
+                    state0, nlist0, sp_state0 = start
+                    injected = self._consume_faults(step0, k,
+                                                    kinds=("overflow_flag",))
+                    if not injected:
+                        # grow whichever capacity overflowed — correctness
+                        # over throughput on the rare growth event
+                        if verdict.detail["nlist"]:
+                            self._grow_neighbor_capacity()
+                            nlist0 = self._build_nlist_grown(state0.positions)
+                        if self._stateful and verdict.detail["special"]:
+                            self.special_force.grow()
+                            self.diagnostics["special_growths"] += 1
+                            self._window_cache.clear()
+                            sp_state0 = self._assemble_special_grown(
+                                state0.positions)
+                    # injected flag: disarmed above, replay unchanged
+                    start = (state0, nlist0, sp_state0)
+                    continue
+                # rollback_replay: a numerical guard tripped
+                if committed is None:
+                    committed = (state, nlist, sp_state, e_cl, e_sp)
+                    mask0 = verdict.trip_mask
+                start = self._guard_rollback(start, step0, k,
+                                             verdict.trip_mask, rollbacks,
+                                             dt0)
+                rollbacks += 1
+        finally:
+            if self.config.dt != dt0:
+                self._set_dt(dt0)
 
     def _run_segment_step(self, state, nlist, sp_state, k: int):
-        """Per-step host loop with the Fig.-9 stage timers split out."""
+        """Per-step host loop wrapped in the same verdict → policy recovery
+        as the scan path: guard trips roll back to the segment start and
+        replay (capacity overflow is already handled inline per step).  A
+        replayed segment re-records its step counters — the trace shows the
+        replay, which is the point of tracing a chaos run."""
+        start = (state, nlist, sp_state)
+        step0 = self._abs_step(state)
+        committed = None
+        mask0 = None
+        rollbacks = 0
+        dt0 = self.config.dt
+        try:
+            while True:
+                state, nlist, sp_state, e_cl, e_sp, trip = (
+                    self._attempt_segment_step(*start, k))
+                if trip is None or not bool(jnp.any(trip)):
+                    out = (state, nlist, sp_state, e_cl, e_sp)
+                    if committed is not None:
+                        out = self._merge_rollback(committed, out, mask0)
+                        self.tracer.registry.counter(
+                            "guard.recoveries").inc()
+                    return out
+                self.diagnostics["window_reruns"] += 1
+                if committed is None:
+                    committed = (state, nlist, sp_state, e_cl, e_sp)
+                    mask0 = np.asarray(trip)
+                start = self._guard_rollback(start, step0, k,
+                                             np.asarray(trip), rollbacks,
+                                             dt0)
+                rollbacks += 1
+        finally:
+            if self.config.dt != dt0:
+                self._set_dt(dt0)
+
+    def _attempt_segment_step(self, state, nlist, sp_state, k: int):
+        """One per-step segment attempt: the Fig.-9 stage timers split out,
+        guard trips accumulated across all ``k`` steps (mirroring the scan
+        window's OR-reduce — no early abort, so scan and step recovery see
+        identical verdicts)."""
         cfg = self.config
         system = self.system
         special = self.special_force
@@ -401,6 +543,9 @@ class MDEngine:
         want = tracer.wants_counters
         step0 = self._abs_step(state) if want else 0
         e_cl = e_sp = jnp.zeros(self._batch_shape)
+        trip = None
+        e_prev = (jnp.full(self._batch_shape, jnp.nan) if self._guard_on
+                  else None)
         for j in range(k):
             rec = {"rebuild": 0, "sp_rebuild": 0} if want else {}
             t0 = time.perf_counter()
@@ -441,10 +586,10 @@ class MDEngine:
                             self._window_cache.clear()
                             if self.diagnostics["special_growths"] > (
                                     cfg.max_capacity_growths):
-                                raise RuntimeError(
+                                self._emergency(
                                     "special-force capacity still exceeded "
                                     f"after {cfg.max_capacity_growths} "
-                                    "doublings")
+                                    "doublings", state=state)
                             sp_state = self._assemble_special_grown(
                                 state.positions)
                             e_sp, f_sp, fl = special.evaluate(state.positions,
@@ -458,14 +603,173 @@ class MDEngine:
                     jax.block_until_ready(f)
                 self.timings["special"] += time.perf_counter() - t0
 
+            if self.faults is not None:
+                # step-mode injection: nan faults only (overflow_flag needs
+                # the scan window's flag plumbing)
+                f, _ = self.faults.apply_engine(
+                    state.step, f, jnp.zeros(self._batch_shape, bool))
             t0 = time.perf_counter()
             with tracer.span("integrate", phase="integrate"):
+                prev = state
                 state = self._integrate_fn(state, f)
                 jax.block_until_ready(state.positions)
             self.timings["integrate"] += time.perf_counter() - t0
+            if self._guard_on:
+                t = step_guard_trip(self.guard, prev.positions, state,
+                                    system.masses, system.box,
+                                    e_cl + e_sp, e_prev)
+                trip = t if trip is None else (trip | t)
+                e_prev = e_cl + e_sp
             if want:
                 tracer.record_step(step0 + j, rec)
-        return state, nlist, sp_state, e_cl, e_sp
+        return state, nlist, sp_state, e_cl, e_sp, trip
+
+    # -- guard recovery (rollback-and-replay, emergency dumps) -------------
+
+    def _guard_rollback(self, start, step0: int, k: int, mask,
+                        rollbacks: int, dt0: float):
+        """Shared rollback bookkeeping for both loop modes: count the trips,
+        disarm one-shot injected faults covering the window, choose the
+        replay start (window start, or the last verified checkpoint when
+        the start itself is tainted), and shrink dt from the second replay
+        on.  Returns the replay's start tuple; escalates to an emergency
+        dump once ``GuardConfig.max_rollbacks`` is exhausted."""
+        n_trips = int(np.sum(mask))
+        self.diagnostics["guard_trips"] += n_trips
+        self._note_guard_trips(mask)
+        self.tracer.registry.counter("guard.trips").inc(n_trips)
+        if rollbacks >= self.guard.max_rollbacks:
+            self._emergency(
+                f"guard trips persist after {rollbacks} rollback replays "
+                f"(window start step {step0}, length {k}, "
+                f"trips={np.asarray(mask).tolist()})",
+                state=start[0], raise_cls=GuardTripError)
+        self.diagnostics["guard_rollbacks"] += 1
+        # one-shot injected faults covering this window: fire them and
+        # clear the window cache so the replay traces fault-free
+        self._consume_faults(step0, k)
+        start = self._rollback_start(start, step0)
+        if rollbacks >= 1:
+            # the first replay keeps the original dt (transient-fault
+            # hypothesis — preserves the bitwise-replay contract for
+            # injected faults); later replays shrink it (instability
+            # hypothesis); _run_segment_* restores dt0 on exit
+            self._set_dt(dt0 * self.guard.dt_shrink ** rollbacks)
+        return start
+
+    def _consume_faults(self, step0: int, k: int, kinds=None) -> list:
+        """Fire injected MD-path faults in [step0, step0+k) and force the
+        re-traces that make the replay fault-free."""
+        if self.faults is None:
+            return []
+        fired = self.faults.consume_in_window(step0, step0 + k, kinds)
+        if fired:
+            self._window_cache.clear()
+            if (any(s.rank is not None for s in fired)
+                    and hasattr(self.special_force, "backend_build_fns")):
+                # rank faults live in the provider's compiled drivers
+                self.special_force.backend_build_fns()
+        return fired
+
+    def _rollback_start(self, start, step0: int):
+        """The replay's start tuple: the window start when healthy, else
+        the newest verified ``AsyncCheckpointer`` step caught up to
+        ``step0``.  The catch-up re-integrates the committed trajectory
+        bitwise: faults are already disarmed, and checkpoint boundaries
+        are clean rebuild points (``run`` rebuilds the neighbor/special
+        state right after saving), so the committed continuation and this
+        fresh-built replay see identical inputs."""
+        state0 = start[0]
+        if self._state_healthy(state0):
+            return start
+        if self.checkpointer is None:
+            self._emergency(
+                "window-start state is non-finite and no checkpointer is "
+                "attached — cannot roll back", state=state0,
+                raise_cls=GuardTripError)
+        tree, cstep = self.checkpointer.restore_latest(
+            dataclasses.asdict(state0))
+        if tree is None or cstep > step0:
+            self._emergency(
+                "window-start state is non-finite and no verified "
+                f"checkpoint at or before step {step0} exists",
+                state=state0, raise_cls=GuardTripError)
+        self.diagnostics["checkpoint_restores"] += 1
+        state0 = self._state_from_tree(tree)
+        nlist0 = self._build_nlist_grown(state0.positions)
+        sp_state0 = (self._assemble_special_grown(state0.positions)
+                     if self._stateful else None)
+        catchup = step0 - cstep
+        if catchup:
+            (state0, nlist0, sp_state0, _, _, _), _ = (
+                self._window_fn(catchup)(state0, nlist0, sp_state0))
+            jax.block_until_ready(state0.positions)
+        return (state0, nlist0, sp_state0)
+
+    def _state_healthy(self, state) -> bool:
+        return bool(np.isfinite(np.asarray(state.positions)).all()
+                    and np.isfinite(np.asarray(state.velocities)).all())
+
+    def _state_from_tree(self, tree) -> MDState:
+        return MDState(**{key: jnp.asarray(v) for key, v in tree.items()})
+
+    def _merge_rollback(self, committed, replayed, mask):
+        """Leaf-wise select between the committed and replayed window
+        results: tripped trajectories (mask True) take the replay,
+        untripped keep the original — the ensemble's per-replica masking.
+        A scalar engine's mask is ``()``, so the replay wins wholesale."""
+        m = jnp.asarray(mask)
+
+        def sel(old, new):
+            mm = m.reshape(m.shape + (1,) * (jnp.ndim(new) - m.ndim))
+            return jnp.where(mm, new, old)
+
+        return jax.tree.map(sel, committed, replayed)
+
+    def _note_guard_trips(self, mask) -> None:
+        """Per-trajectory trip attribution hook (ensemble override)."""
+
+    def _set_dt(self, dt: float) -> None:
+        """Swap the integration timestep: the jitted step fns and cached
+        windows close over dt at trace time, so both are rebuilt."""
+        self.config.dt = float(dt)
+        self._build_fns()
+        self._window_cache.clear()
+
+    def _emergency_root(self) -> Optional[str]:
+        cfg = self.config
+        if cfg.emergency_path:
+            return cfg.emergency_path
+        if self.checkpointer is not None:
+            return os.path.join(self.checkpointer.root, "emergency")
+        if cfg.checkpoint_path:
+            return cfg.checkpoint_path + ".emergency"
+        return None
+
+    def _emergency(self, reason: str, state=None, raise_cls=RuntimeError):
+        """Unrecoverable-verdict exit: dump an emergency checkpoint plus a
+        diagnostics bundle (when a dump root is configured and a state is
+        known), then raise with the dump path in the message."""
+        state = state if state is not None else self._last_state
+        root = self._emergency_root()
+        path = None
+        if root is not None and state is not None:
+            try:
+                step = self._abs_step(state)
+            except (TypeError, ValueError):
+                step = None
+            bundle = {"reason": reason, "step": step,
+                      "diagnostics": self.diagnostics,
+                      "timings": self.timings,
+                      "config": dataclasses.asdict(self.config),
+                      "faults": (self.faults.summary()
+                                 if self.faults is not None else None)}
+            path = dump_emergency(root, dataclasses.asdict(state), bundle,
+                                  step=step)
+        self.diagnostics["emergency_dumps"].append(path or reason)
+        if path is not None:
+            reason = f"{reason} (emergency checkpoint: {path})"
+        raise raise_cls(reason)
 
     def _calibrate_phases(self, state, nlist, sp_state) -> None:
         """In-scan phase attribution for scan-mode runs (Fig. 9 fractions).
@@ -508,6 +812,7 @@ class MDEngine:
             observe_every: int = 10) -> MDState:
         cfg = self.config
         tracer = self.tracer
+        self._last_state = state
         # timings are per-run: repeated run() calls on one engine no longer
         # silently accumulate (diagnostics stay cumulative — see reset())
         self.timings = self._init_timings()
@@ -543,6 +848,13 @@ class MDEngine:
 
             k = self._segment_len(i, self._abs_step(state), n_steps,
                                   observe is not None, observe_every)
+            if self.faults is not None and self.faults.sync_window(
+                    self._abs_step(state), k):
+                # rank-targeted faults changed armed state: force a
+                # re-trace so the pipeline seam sees it
+                self._window_cache.clear()
+                if hasattr(self.special_force, "backend_build_fns"):
+                    self.special_force.backend_build_fns()
             if cfg.loop_mode == "step" or self._host_special:
                 state, nlist, sp_state, e_cl, e_sp = self._run_segment_step(
                     state, nlist, sp_state, k)
@@ -551,13 +863,30 @@ class MDEngine:
                     state, nlist, sp_state, k)
             i += k
             state = self._post_segment(state, e_cl, e_sp, i)
+            self._last_state = state
 
             if observe is not None and (i - 1) % observe_every == 0:
                 observe(state, self._observation(state, e_cl, e_sp))
 
-            if (cfg.checkpoint_every and cfg.checkpoint_path
+            if (cfg.checkpoint_every
                     and self._abs_step(state) % cfg.checkpoint_every == 0):
-                self.checkpoint(state, cfg.checkpoint_path)
+                if self.checkpointer is not None:
+                    self.checkpointer.save(dataclasses.asdict(state),
+                                           self._abs_step(state))
+                if cfg.checkpoint_path:
+                    self.checkpoint(state, cfg.checkpoint_path)
+                # a checkpoint boundary is a clean rebuild point: the
+                # continuation depends only on the saved state (not on a
+                # carried list whose reference positions predate it), so a
+                # restart/rollback from this checkpoint replays the
+                # committed continuation bitwise (see _rollback_start)
+                t0 = time.perf_counter()
+                with tracer.span("checkpoint_rebuild", phase="neighbor"):
+                    nlist = self._build_nlist_grown(state.positions)
+                    if self._stateful:
+                        sp_state = self._assemble_special_grown(
+                            state.positions)
+                self.timings["neighbor"] += time.perf_counter() - t0
         tracer.stop_capture()
         tracer.flush()  # no-op unless ObsConfig.trace_dir is set
         return state

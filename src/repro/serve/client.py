@@ -30,7 +30,7 @@ import numpy as np
 
 from ..backend import ForceRequest, ForceResult
 from ..core.nnpot import UnitConversion
-from .server import ForceServer
+from .server import ForceServer, ServerOverloaded
 
 
 class RemoteForceProvider:
@@ -72,10 +72,19 @@ class RemoteForceProvider:
         nn_pos = (pos[self.nn_indices].astype(np.float32)
                   * self.units.length_to_model)
         nn_pos = np.mod(nn_pos, self.box_model)
-        res: ForceResult = self.server.compute(
-            ForceRequest(positions=nn_pos, box=self.box_model,
-                         types=self.nn_types, tenant=self.tenant),
-            timeout=self.timeout_s)
+        try:
+            res: ForceResult = self.server.compute(
+                ForceRequest(positions=nn_pos, box=self.box_model,
+                             types=self.nn_types, tenant=self.tenant),
+                timeout=self.timeout_s)
+        except ServerOverloaded as e:
+            # compute() already retried per ServeConfig.max_retries; what
+            # reaches here is exhausted backpressure — degrade like any
+            # other failed request so the engine's error is uniform
+            raise RuntimeError(
+                f"force server overloaded for tenant {self.tenant!r} "
+                f"after {self.server.config.max_retries} retries: "
+                f"{e}") from e
         self.last_diag = dict(res.diagnostics)
         if not res.ok:
             raise RuntimeError(

@@ -58,6 +58,9 @@ class ServeConfig:
     default_timeout_s: float = 30.0    # deadline when the request has none
     nbr_capacity: int = 64         # neighbor capacity per atom bucket
     metrics_window_s: float = 5.0  # trailing rps window
+    max_retries: int = 0           # compute() retries on ServerOverloaded
+    retry_backoff_s: float = 0.01  # first retry delay (doubles per attempt)
+    retry_backoff_max_s: float = 0.5   # backoff ceiling
 
     @property
     def bucketing(self) -> BucketingConfig:
@@ -167,9 +170,12 @@ class ForceServer:
     """
 
     def __init__(self, model: DPModel, params, config: ServeConfig = None,
-                 executor_factory=None, obs=None):
+                 executor_factory=None, obs=None, fault_plan=None):
         self.model = model
         self.params = params
+        # health.FaultPlan seam: lets tests fail/stall the executor on a
+        # chosen batch (exercises per-request degradation + retry paths)
+        self.fault_plan = fault_plan
         self.config = config or ServeConfig()
         self.config.bucketing  # validate bucket lists early
         # obs: Tracer | ObsConfig | None — spans around bucket dispatches
@@ -218,10 +224,37 @@ class ForceServer:
 
     def compute(self, request: ForceRequest,
                 timeout: Optional[float] = None) -> ForceResult:
-        """Synchronous submit + wait (the client stub's hot path)."""
-        budget = (timeout if timeout is not None
-                  else self.config.default_timeout_s)
-        return self.submit(request, timeout=budget).result(budget + 1.0)
+        """Synchronous submit + wait (the client stub's hot path).
+
+        ``ServerOverloaded`` backpressure is retried with bounded
+        exponential backoff plus deterministic jitter, up to
+        ``ServeConfig.max_retries`` times and never past the original
+        deadline (which the first submit attempt pins on the request — a
+        retried request does not get its budget extended).  Exhausted
+        retries re-raise for the caller to degrade.  Retries land in the
+        ``serve.retries`` obs counter."""
+        cfg = self.config
+        budget = timeout if timeout is not None else cfg.default_timeout_s
+        deadline = time.monotonic() + budget
+        attempt = 0
+        while True:
+            try:
+                fut = self.submit(request, timeout=budget)
+            except ServerOverloaded:
+                remaining = deadline - time.monotonic()
+                if attempt >= cfg.max_retries or remaining <= 0:
+                    raise
+                delay = min(cfg.retry_backoff_s * (2.0 ** attempt),
+                            cfg.retry_backoff_max_s)
+                # jitter keyed on the request id: decorrelates a retry herd
+                # without nondeterminism in tests
+                delay *= 0.5 + 0.5 * (((request.req_id + 31 * attempt)
+                                       % 16) / 15.0)
+                time.sleep(min(delay, remaining))
+                attempt += 1
+                self.tracer.registry.counter("serve.retries").inc()
+                continue
+            return fut.result(budget + 1.0)
 
     def evaluate_direct(self, request: ForceRequest) -> ForceResult:
         """Bypass the queue: evaluate one request alone (B=1 compiled
@@ -357,6 +390,10 @@ class ForceServer:
     def _run_bucket(self, requests: list[ForceRequest],
                     n_bucket: int) -> list[ForceResult]:
         """Pad one same-bucket group to a compiled shape and evaluate."""
+        if self.fault_plan is not None:
+            # may sleep (serve_delay) or raise InjectedFault (serve_fail);
+            # _dispatch degrades the affected group per-request
+            self.fault_plan.before_bucket_eval()
         coords, types, mask, box = pad_group(
             requests, n_bucket, self.config.batch_buckets)
         with self.tracer.span("serve.bucket", phase="serve",

@@ -1,0 +1,506 @@
+"""Guarded execution: the fault matrix.
+
+Contracts under test (see ``repro.health`` and README "Robustness & fault
+injection"):
+
+* **bitwise-off**: a constructed-but-disabled ``GuardConfig`` (and a fully
+  fired ``FaultPlan``) traces a program identical to an unguarded engine;
+* **bitwise replay**: an injected mid-window NaN is detected by the in-scan
+  guard, rolled back and replayed, and the recovered trajectory equals the
+  fault-free one bit for bit — in scan AND step loop modes, scalar AND
+  ensemble engines (per-replica masking);
+* **verdict table**: capacity overflow still grows-and-replays (an
+  *injected* overflow flag replays without growing), exhausted recovery
+  dumps an emergency checkpoint + diagnostics bundle instead of a bare
+  RuntimeError;
+* **checkpoint integrity**: per-leaf CRC32 verification, corrupt/truncated
+  step dirs are skipped by ``restore_latest`` in favor of the newest
+  verified one, and a tainted window start rolls back through the
+  checkpointer with a bitwise catch-up;
+* **serve**: bounded-backoff retry on ``ServerOverloaded`` (then clean
+  degradation when exhausted), injected executor failures degrade only the
+  affected batch.
+"""
+import dataclasses
+import json
+import os
+import time
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_in_subprocess
+from repro.ckpt import (AsyncCheckpointer, CheckpointCorrupt, load_pytree,
+                        save_pytree)
+from repro.health import (FaultPlan, FaultSpec, GuardConfig, GuardTripError,
+                          RECOVERY_POLICY, WindowVerdict)
+from repro.md import EngineConfig, MDEngine, build_solvated_protein
+from repro.obs import get_registry
+
+_CFG = dict(cutoff=0.9, neighbor_capacity=96, dt=0.0005, thermostat_t=200.0)
+
+
+@pytest.fixture(scope="module")
+def small_md():
+    system, pos, nn_idx = build_solvated_protein(5, water_per_protein_atom=1.5)
+    return system, pos
+
+
+def _run(system, pos, n_steps=24, seed=1, **kw):
+    eng = MDEngine(system, EngineConfig(**_CFG, **kw.pop("cfg", {})), **kw)
+    return eng, eng.run(eng.init_state(pos, 200.0, seed=seed), n_steps)
+
+
+def _same(a, b) -> bool:
+    return bool((np.asarray(a) == np.asarray(b)).all())
+
+
+# -- config + verdict surface ------------------------------------------------
+
+def test_config_and_spec_validation():
+    with pytest.raises(ValueError):
+        GuardConfig(max_rollbacks=0)
+    with pytest.raises(ValueError):
+        GuardConfig(dt_shrink=0.0)
+    with pytest.raises(ValueError):
+        FaultSpec("no_such_fault")
+    with pytest.raises(ValueError):
+        FaultSpec("nan_force")            # engine kinds need a step
+    with pytest.raises(ValueError):
+        FaultSpec("serve_fail")           # serve kinds need nth
+    with pytest.raises(ValueError):
+        WindowVerdict("no_such_verdict")
+
+
+def test_verdict_policy_table():
+    assert WindowVerdict("ok").policy == "commit"
+    assert WindowVerdict("capacity_overflow").policy == "grow_replay"
+    assert WindowVerdict("guard_trip").policy == "rollback_replay"
+    assert WindowVerdict("unrecoverable").policy == "emergency_dump"
+    assert set(RECOVERY_POLICY) == {"ok", "capacity_overflow", "guard_trip",
+                                    "unrecoverable"}
+
+
+def test_fault_plan_one_shot_semantics():
+    plan = FaultPlan([FaultSpec("nan_force", step=3)])
+    f = jnp.ones((4, 3))
+    ovf = jnp.zeros((), bool)
+    f2, _ = plan.apply_engine(jnp.asarray(3), f, ovf)
+    assert bool(jnp.isnan(f2).all())
+    assert plan.consume_in_window(0, 10) == [plan.faults[0]]
+    assert plan.faults[0].fired and not plan.pending()
+    # fired specs contribute nothing: the seam is the identity again
+    f3, ovf3 = plan.apply_engine(jnp.asarray(3), f, ovf)
+    assert f3 is f and ovf3 is ovf
+    assert plan.summary()["fired"] == 1
+
+
+# -- bitwise contracts (scalar engine) ---------------------------------------
+
+def test_guard_enabled_quiet_is_bitwise_identical(small_md):
+    system, pos = small_md
+    _, ref = _run(system, pos)
+    _, out = _run(system, pos, guard=GuardConfig(enabled=True))
+    assert _same(ref.positions, out.positions)
+    assert _same(ref.velocities, out.velocities)
+
+
+def test_nan_fault_recovers_bitwise_scan(small_md):
+    system, pos = small_md
+    _, ref = _run(system, pos)
+    plan = FaultPlan([FaultSpec("nan_force", step=5)])
+    trips0 = get_registry().counter("guard.trips").value
+    recov0 = get_registry().counter("guard.recoveries").value
+    eng, out = _run(system, pos, guard=GuardConfig(enabled=True), faults=plan)
+    assert plan.faults[0].fired
+    assert eng.diagnostics["guard_trips"] == 1
+    assert eng.diagnostics["guard_rollbacks"] == 1
+    assert eng.diagnostics["window_reruns"] == 1
+    assert get_registry().counter("guard.trips").value == trips0 + 1
+    assert get_registry().counter("guard.recoveries").value == recov0 + 1
+    assert _same(ref.positions, out.positions)
+    assert _same(ref.velocities, out.velocities)
+    # the replay kept the original dt (transient-fault hypothesis)
+    assert eng.config.dt == _CFG["dt"]
+
+
+def test_nan_fault_recovers_bitwise_step_mode(small_md):
+    system, pos = small_md
+    _, ref = _run(system, pos, cfg=dict(loop_mode="step"))
+    plan = FaultPlan([FaultSpec("nan_force", step=5)])
+    eng, out = _run(system, pos, cfg=dict(loop_mode="step"),
+                    guard=GuardConfig(enabled=True), faults=plan)
+    assert plan.faults[0].fired and eng.diagnostics["guard_trips"] == 1
+    assert _same(ref.positions, out.positions)
+    assert _same(ref.velocities, out.velocities)
+
+
+def test_injected_overflow_replays_without_growth(small_md):
+    system, pos = small_md
+    _, ref = _run(system, pos)
+    plan = FaultPlan([FaultSpec("overflow_flag", step=7)])
+    eng, out = _run(system, pos, faults=plan)
+    assert plan.faults[0].fired
+    assert eng.diagnostics["window_reruns"] == 1
+    assert eng.diagnostics["special_growths"] == 0
+    assert eng.diagnostics["capacity_growths"] == []
+    assert _same(ref.positions, out.positions)
+
+
+def test_persistent_trip_escalates_to_emergency_dump(small_md, tmp_path):
+    system, pos = small_md
+    # a 1e-6 K ceiling trips every window, every replay: recovery must
+    # escalate after max_rollbacks with a restorable dump, not loop forever
+    guard = GuardConfig(enabled=True, temp_ceiling=1e-6, max_rollbacks=2)
+    eng = MDEngine(system, EngineConfig(emergency_path=str(tmp_path), **_CFG),
+                   guard=guard)
+    with pytest.raises(GuardTripError) as ei:
+        eng.run(eng.init_state(pos, 200.0, seed=1), 12)
+    assert "emergency checkpoint" in str(ei.value)
+    assert eng.diagnostics["guard_rollbacks"] == 2
+    [dump] = eng.diagnostics["emergency_dumps"]
+    bundle = json.load(open(os.path.join(dump, "diagnostics.json")))
+    assert "guard trips persist" in bundle["reason"]
+    # the second replay ran at a shrunk dt; the bundle captures it as-was
+    assert bundle["config"]["dt"] == pytest.approx(_CFG["dt"] * 0.5)
+    assert eng.config.dt == _CFG["dt"]      # restored on exit
+    restored = MDEngine.restore(dump)       # the dump is a normal checkpoint
+    assert np.asarray(restored.positions).shape == np.asarray(pos).shape
+
+
+def test_capacity_exhaustion_dumps_before_raising(small_md, tmp_path):
+    system, pos = small_md
+    cfg = dict(_CFG)
+    cfg.update(neighbor_capacity=2, max_capacity_growths=0,
+               emergency_path=str(tmp_path))
+    eng = MDEngine(system, EngineConfig(**cfg))
+    with pytest.raises(RuntimeError) as ei:
+        eng.run(eng.init_state(pos, 200.0, seed=1), 4)
+    assert "neighbor capacity" in str(ei.value)
+    assert "emergency checkpoint" in str(ei.value)
+    [dump] = eng.diagnostics["emergency_dumps"]
+    bundle = json.load(open(os.path.join(dump, "diagnostics.json")))
+    assert "neighbor capacity" in bundle["reason"]
+    assert load_pytree(dump)["positions"].shape == np.asarray(pos).shape
+
+
+def test_tainted_window_start_rolls_back_through_checkpointer(small_md,
+                                                              tmp_path):
+    system, pos = small_md
+    ck = AsyncCheckpointer(str(tmp_path), keep=5)
+    eng = MDEngine(system, EngineConfig(checkpoint_every=3, **_CFG),
+                   guard=GuardConfig(enabled=True), checkpointer=ck)
+    ref = eng.run(eng.init_state(pos, 200.0, seed=1), 8)
+    ck.wait()
+    assert int(ref.step) == 8               # checkpoints exist at 3 and 6
+    bad = dataclasses.replace(ref, positions=ref.positions * jnp.nan)
+    state0, nlist0, _ = eng._rollback_start((bad, None, None), 8)
+    assert eng.diagnostics["checkpoint_restores"] == 1
+    # restored from step 6 and caught up 2 steps — bitwise the committed
+    # trajectory (faults disarmed, fresh list bitwise-neutral inside skin)
+    assert int(state0.step) == 8
+    assert _same(state0.positions, ref.positions)
+    assert _same(state0.velocities, ref.velocities)
+    assert not bool(jnp.any(nlist0.overflow))
+
+
+def test_rollback_without_checkpointer_dumps(small_md, tmp_path):
+    system, pos = small_md
+    eng = MDEngine(system, EngineConfig(emergency_path=str(tmp_path), **_CFG),
+                   guard=GuardConfig(enabled=True))
+    st = eng.init_state(pos, 200.0, seed=1)
+    bad = dataclasses.replace(st, positions=st.positions * jnp.nan)
+    with pytest.raises(GuardTripError, match="no checkpointer"):
+        eng._rollback_start((bad, None, None), 0)
+    assert len(eng.diagnostics["emergency_dumps"]) == 1
+
+
+# -- ensemble: per-replica masked recovery -----------------------------------
+
+def test_ensemble_masked_recovery_single_device(small_md):
+    from repro.ensemble import EnsembleConfig, EnsembleEngine
+    system, pos = small_md
+    ens = EnsembleConfig(n_replicas=3, temps=(200.0, 230.0, 260.0))
+
+    def run_ens(**kw):
+        eng = EnsembleEngine(system, EngineConfig(**_CFG), ens, **kw)
+        return eng, eng.run(eng.init_state(pos), 16)
+
+    _, ref = run_ens()
+    plan = FaultPlan([FaultSpec("nan_force", step=5, replica=1)])
+    eng, out = run_ens(guard=GuardConfig(enabled=True), faults=plan)
+    assert plan.faults[0].fired
+    # only replica 1 tripped; recovery is masked per replica and the whole
+    # ensemble still reproduces the fault-free run bitwise
+    assert eng.diagnostics["replica_guard_trips"].tolist() == [0, 1, 0]
+    assert eng.diagnostics["guard_trips"] == 1
+    assert _same(ref.positions, out.positions)
+    assert _same(ref.velocities, out.velocities)
+    assert _same(ref.ladder, out.ladder)
+
+
+# -- checkpoint integrity ----------------------------------------------------
+
+def test_crc_mismatch_detected(tmp_path):
+    path = str(tmp_path / "ck")
+    tree = {"x": np.arange(12, dtype=np.float32).reshape(4, 3),
+            "y": np.int32(7)}
+    save_pytree(path, tree, step=5)
+    man = json.load(open(os.path.join(path, "manifest.json")))
+    assert man["format"] == 2 and len(man["crc32"]) == 2
+    back = load_pytree(path)
+    assert _same(back["x"], tree["x"])
+    # tamper with a stored CRC: verification must fail loudly
+    man["crc32"][0] ^= 0x1
+    json.dump(man, open(os.path.join(path, "manifest.json"), "w"))
+    with pytest.raises(CheckpointCorrupt, match="CRC mismatch"):
+        load_pytree(path)
+
+
+def test_truncated_shard_detected(tmp_path):
+    path = str(tmp_path / "ck")
+    save_pytree(path, {"x": np.zeros((64, 3), np.float32)}, step=1)
+    shard = os.path.join(path, "shard_host0.npz")
+    with open(shard, "r+b") as f:
+        f.truncate(os.path.getsize(shard) // 2)
+    with pytest.raises(CheckpointCorrupt):
+        load_pytree(path)
+
+
+def test_format1_checkpoints_still_load(tmp_path):
+    path = str(tmp_path / "ck")
+    tree = {"x": np.arange(6, dtype=np.float32)}
+    save_pytree(path, tree)
+    man_path = os.path.join(path, "manifest.json")
+    man = json.load(open(man_path))
+    del man["crc32"]
+    man["format"] = 1
+    json.dump(man, open(man_path, "w"))
+    assert _same(load_pytree(path)["x"], tree["x"])
+
+
+def test_restore_latest_falls_back_past_truncated(tmp_path):
+    plan = FaultPlan([FaultSpec("truncate_ckpt", nth=2)])
+    ck = AsyncCheckpointer(str(tmp_path), keep=5, fault_plan=plan)
+    ck.save({"x": np.full(8, 1.0, np.float32)}, step=10)
+    ck.save({"x": np.full(8, 2.0, np.float32)}, step=20)   # truncated
+    ck.wait()
+    assert plan.faults[0].fired
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        tree, step = ck.restore_latest({"x": jnp.zeros(8)})
+    assert step == 10                       # newest *verified*, not newest
+    assert _same(tree["x"], np.full(8, 1.0, np.float32))
+    assert any("corrupt" in str(x.message) for x in w)
+
+
+# -- serve: retry/backoff + injected executor faults -------------------------
+
+@pytest.fixture(scope="module")
+def serve_model():
+    import jax
+    from repro.dp import DPConfig, DPModel, DescriptorConfig
+    desc = DescriptorConfig(kind="dpa1", rcut=0.6, rcut_smth=0.3, sel=32,
+                            ntypes=4, neuron=(8, 16), axis_neuron=4,
+                            attn_layers=1, attn_hidden=16, attn_heads=2)
+    model = DPModel(DPConfig(descriptor=desc, fitting_neuron=(16, 16)))
+    return model, model.init_params(jax.random.PRNGKey(0))
+
+
+def _request(n=24, tenant="t"):
+    from repro.backend import ForceRequest
+    rng = np.random.default_rng(3)
+    return ForceRequest(
+        positions=rng.uniform(0, 2.5, (n, 3)).astype(np.float32),
+        box=np.full(3, 2.5, np.float32),
+        types=rng.integers(0, 4, n).astype(np.int32), tenant=tenant)
+
+
+def test_serve_injected_failure_degrades_batch_only(serve_model):
+    from repro.serve import ForceServer, ServeConfig
+    model, params = serve_model
+    plan = FaultPlan([FaultSpec("serve_fail", nth=1)])
+    srv = ForceServer(model, params,
+                      ServeConfig(atom_buckets=(32,), batch_buckets=(1, 2),
+                                  nbr_capacity=48),
+                      fault_plan=plan)
+    try:
+        r1 = srv.compute(_request(), timeout=20.0)
+        assert not r1.ok and "injected" in r1.error
+        assert plan.faults[0].fired
+        r2 = srv.compute(_request(), timeout=20.0)   # server kept serving
+        assert r2.ok, r2.error
+    finally:
+        srv.stop()
+
+
+def test_serve_retry_then_succeed(serve_model):
+    from repro.serve import ForceServer, ServeConfig
+    model, params = serve_model
+    # batch 1 stalls 0.6 s in the executor while the queue holds only one
+    # request: the third submit hits backpressure and must retry through it
+    plan = FaultPlan([FaultSpec("serve_delay", nth=1, delay_s=0.6)])
+    srv = ForceServer(model, params,
+                      ServeConfig(atom_buckets=(32,), batch_buckets=(1, 2),
+                                  queue_bound=1, batch_window_s=0.0,
+                                  max_retries=16, retry_backoff_s=0.05,
+                                  retry_backoff_max_s=0.1),
+                      fault_plan=plan)
+    retries0 = get_registry().counter("serve.retries").value
+    try:
+        srv.warmup(n_atoms=24)
+        fut1 = srv.submit(_request(tenant="a"), timeout=20.0)
+        time.sleep(0.15)       # let the worker pick req 1 up and stall
+        fut2 = srv.submit(_request(tenant="b"), timeout=20.0)  # fills queue
+        r3 = srv.compute(_request(tenant="c"), timeout=20.0)
+        assert r3.ok, r3.error
+        assert fut1.result(20.0).ok and fut2.result(20.0).ok
+        assert get_registry().counter("serve.retries").value > retries0
+    finally:
+        srv.stop()
+
+
+def test_serve_retry_exhausted_reraises_and_client_degrades(serve_model):
+    from repro.serve import (ForceServer, RemoteForceProvider, ServeConfig,
+                             ServerOverloaded)
+    model, params = serve_model
+    plan = FaultPlan([FaultSpec("serve_delay", nth=1, delay_s=1.5)])
+    srv = ForceServer(model, params,
+                      ServeConfig(atom_buckets=(32,), batch_buckets=(1, 2),
+                                  queue_bound=1, batch_window_s=0.0,
+                                  max_retries=2, retry_backoff_s=0.02,
+                                  retry_backoff_max_s=0.05),
+                      fault_plan=plan)
+    try:
+        srv.warmup(n_atoms=24)
+        srv.submit(_request(tenant="a"), timeout=20.0)
+        time.sleep(0.15)
+        srv.submit(_request(tenant="b"), timeout=20.0)
+        with pytest.raises(ServerOverloaded):
+            srv.compute(_request(tenant="c"), timeout=0.5)
+        n = 24
+        prov = RemoteForceProvider(srv, np.arange(n),
+                                   _request(n).types, _request(n).box, n,
+                                   timeout_s=0.2)
+        with pytest.raises(RuntimeError, match="overloaded"):
+            prov._host_eval(np.asarray(_request(n).positions))
+    finally:
+        srv.stop()
+
+
+# -- distributed: rank-targeted faults (subprocess, 8 forced devices) --------
+
+_DD_PRELUDE = r"""
+import json
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import DeepmdForceProvider, suggest_config
+from repro.dp import DPModel, paper_dpa1_config
+from repro.health import FaultPlan, FaultSpec, GuardConfig
+from repro.launch.mesh import make_dd_mesh
+from repro.md import (EngineConfig, MDEngine, build_solvated_protein,
+                      mark_nn_group)
+
+system, pos, nn_idx = build_solvated_protein(5, water_per_protein_atom=1.5)
+system = mark_nn_group(system, nn_idx)
+model = DPModel(paper_dpa1_config(ntypes=4, rcut=0.6, sel=32))
+params = model.init_params(jax.random.PRNGKey(0))
+dd = suggest_config(len(nn_idx), np.asarray(system.box), 8, 0.6,
+                    nbr_capacity=48, slack=2.5, skin=0.04,
+                    force_mode="ghost_reduce",
+                    coords=np.asarray(pos)[np.asarray(nn_idx)])
+mesh = make_dd_mesh(8)
+CFG = dict(cutoff=0.9, neighbor_capacity=96, dt=0.0005, thermostat_t=200.0)
+out = {}
+"""
+
+
+@pytest.mark.slow
+def test_dd_rank_fault_attribution_and_recovery():
+    code = _DD_PRELUDE + r"""
+def provider(hook=None):
+    return DeepmdForceProvider(model, params, nn_idx, system.types,
+                               system.box, system.n_atoms, dd_config=dd,
+                               mesh=mesh, fault_hook=hook)
+
+# per-rank attribution: an armed rank-3 fault shows up ONLY in rank 3's
+# pre-reduce nonfinite counter
+plan0 = FaultPlan([FaultSpec("nan_force", step=0, rank=3)])
+plan0.sync_window(0, 8)
+pipe = provider(hook=plan0.pipeline_hook()).pipeline
+nn_pos = jnp.asarray(np.asarray(pos)[np.asarray(nn_idx)])
+nn_types = jnp.asarray(np.asarray(system.types)[np.asarray(nn_idx)])
+_, f, diag = pipe.build_force_fn()(params, nn_pos, nn_types)
+bad = np.asarray(diag["rank_nonfinite"])
+out["rank_nonfinite_hot"] = int(np.argmax(bad))
+out["rank_nonfinite_others"] = int(np.delete(bad, 3).sum())
+out["forces_poisoned"] = bool(np.isnan(np.asarray(f)).any())
+
+# engine-level: the same fault inside a fused window recovers bitwise
+ref_eng = MDEngine(system, EngineConfig(**CFG), special_force=provider())
+ref = ref_eng.run(ref_eng.init_state(pos, 200.0, seed=1), 12)
+
+plan = FaultPlan([FaultSpec("nan_force", step=5, rank=3)])
+eng = MDEngine(system, EngineConfig(**CFG),
+               special_force=provider(hook=plan.pipeline_hook()),
+               guard=GuardConfig(enabled=True), faults=plan)
+rec = eng.run(eng.init_state(pos, 200.0, seed=1), 12)
+out["fired"] = plan.faults[0].fired
+out["guard_trips"] = eng.diagnostics["guard_trips"]
+out["bitwise"] = bool(
+    (np.asarray(ref.positions) == np.asarray(rec.positions)).all()
+    and (np.asarray(ref.velocities) == np.asarray(rec.velocities)).all())
+print("JSON" + json.dumps(out))
+"""
+    res = run_in_subprocess(code)
+    got = json.loads(res[res.index("JSON") + 4:].splitlines()[0])
+    assert got["rank_nonfinite_hot"] == 3
+    assert got["rank_nonfinite_others"] == 0
+    assert got["forces_poisoned"]
+    assert got["fired"] and got["guard_trips"] >= 1
+    assert got["bitwise"]
+
+
+@pytest.mark.slow
+def test_ensemble_dd_masked_recovery_2x4_mesh():
+    code = _DD_PRELUDE + r"""
+from repro.ensemble import (BatchedDeepmdProvider, EnsembleConfig,
+                            EnsembleEngine, make_ensemble_mesh)
+
+R = 4
+mesh24 = make_ensemble_mesh(2, 4)
+dd4 = suggest_config(len(nn_idx), np.asarray(system.box), 4, 0.6,
+                     nbr_capacity=48, slack=2.5, skin=0.04,
+                     force_mode="ghost_reduce",
+                     coords=np.asarray(pos)[np.asarray(nn_idx)])
+ens = EnsembleConfig(n_replicas=R, temps=(200.0, 220.0, 240.0, 260.0))
+
+def provider(hook=None):
+    return BatchedDeepmdProvider(model, params, nn_idx, system.types,
+                                 system.box, system.n_atoms, n_replicas=R,
+                                 dd_config=dd4, mesh=mesh24, fault_hook=hook)
+
+ref_eng = EnsembleEngine(system, EngineConfig(**CFG), ens,
+                         special_force=provider())
+ref = ref_eng.run(ref_eng.init_state(pos), 12)
+
+# replica 3 lives on the second replica-mesh group (rep0=2): poison its
+# rank-2 contribution mid-window; recovery must mask to that replica only
+plan = FaultPlan([FaultSpec("nan_force", step=5, rank=2, replica=3)])
+eng = EnsembleEngine(system, EngineConfig(**CFG), ens,
+                     special_force=provider(hook=plan.pipeline_hook()),
+                     guard=GuardConfig(enabled=True), faults=plan)
+rec = eng.run(eng.init_state(pos), 12)
+out["fired"] = plan.faults[0].fired
+out["replica_trips"] = eng.diagnostics["replica_guard_trips"].tolist()
+out["bitwise"] = bool(
+    (np.asarray(ref.positions) == np.asarray(rec.positions)).all()
+    and (np.asarray(ref.velocities) == np.asarray(rec.velocities)).all())
+print("JSON" + json.dumps(out))
+"""
+    res = run_in_subprocess(code)
+    got = json.loads(res[res.index("JSON") + 4:].splitlines()[0])
+    assert got["fired"]
+    assert got["replica_trips"] == [0, 0, 0, 1]
+    assert got["bitwise"]
